@@ -1,0 +1,65 @@
+"""Summarize hillclimb runs: per cell, baseline vs levers, the three
+roofline terms + dominant-term delta (feeds EXPERIMENTS.md §Perf)."""
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, model_flops
+
+
+def load(dirpath="experiments/hillclimb"):
+    cells = defaultdict(dict)
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as f:
+            d = json.load(f)
+        base = os.path.basename(p)[: -len(".json")]
+        parts = base.split("__")
+        arch, shape, mesh = parts[0], parts[1], parts[2]
+        tag = "__".join(parts[3:]) if len(parts) > 3 else "baseline"
+        if d.get("status") != "ok":
+            cells[(arch, shape)][tag] = {"error": d.get("error")}
+            continue
+        corr = d.get("corrected") or {}
+        flops = corr.get("flops_total", 0)
+        byts = corr.get("bytes_total", 0)
+        coll = corr.get("collective_bytes_total", 0)
+        terms = {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": byts / HBM_BW,
+            "collective_s": coll / ICI_BW,
+        }
+        bound = max(terms.values())
+        mf = model_flops(arch, shape)
+        cells[(arch, shape)][tag] = {
+            **terms,
+            "dominant": max(terms, key=terms.get),
+            "bound_s": bound,
+            "roofline_frac": (mf / (d["devices"] * PEAK_FLOPS)) / bound if bound else 0,
+            "temp_gb": (d.get("memory", {}).get("temp_bytes") or 0) / 1e9,
+        }
+    return cells
+
+
+def main():
+    cells = load()
+    for (arch, shape), tags in cells.items():
+        print(f"\n=== {arch} / {shape} ===")
+        base = tags.get("baseline", {})
+        for tag, r in tags.items():
+            if "error" in r:
+                print(f"  {tag:22s} ERROR {r['error'][:60]}")
+                continue
+            delta = ""
+            if tag != "baseline" and base and "bound_s" in base:
+                delta = f"  bound x{base['bound_s'] / r['bound_s']:.2f}"
+            print(
+                f"  {tag:22s} comp {r['compute_s']:9.3e}  mem {r['memory_s']:9.3e}  "
+                f"coll {r['collective_s']:9.3e}  dom={r['dominant'][:-2]:10s} "
+                f"frac={r['roofline_frac']:.3f} temp={r['temp_gb']:7.1f}GB{delta}"
+            )
+
+
+if __name__ == "__main__":
+    main()

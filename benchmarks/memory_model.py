@@ -1,0 +1,126 @@
+"""Analytic per-device memory model (the "fits on v5e 16GB" proof).
+
+The CPU backend's buffer assignment materializes intermediates a TPU would
+fuse/stream, so compiled.memory_analysis() temp bytes are a loose upper
+bound (documented in EXPERIMENTS.md §Dry-run).  This model computes the
+real per-device residents from the sharding rules themselves:
+
+  params (bf16) + optimizer state + gradients (transient fp32)
+  + saved scan carries under full remat (train)
+  + KV/SSM caches (decode/prefill) + dominant transient block
+
+Every tensor is divided by the product of the mesh axes the rules engine
+actually assigns it — the same code path the dry-run uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES_BY_NAME
+from repro.dist import sharding as shd
+from repro.models import build_model
+from repro.models.params import is_spec
+import jax
+
+
+class MeshDesc:
+    def __init__(self, shape: Dict[str, int]):
+        self.axis_names = tuple(shape)
+        self.shape = dict(shape)
+
+
+def _per_device_bytes(spec_tree, mesh, itemsize: float, rules=None) -> float:
+    total = 0.0
+    for sp in jax.tree.leaves(spec_tree, is_leaf=is_spec):
+        p = shd.spec_for_shape(sp.shape, sp.axes, mesh, rules)
+        div = 1
+        for asg in tuple(p):
+            if asg is None:
+                continue
+            names = (asg,) if isinstance(asg, str) else asg
+            for a in names:
+                div *= mesh.shape[a]
+        total += float(np.prod(sp.shape)) * itemsize / div
+    return total
+
+
+def analytic_memory_gb(arch: str, shape_name: str, multi_pod: bool = False,
+                       optimizer: str = None, remat: str = "full") -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = MeshDesc({"pod": 2, "data": 16, "model": 16} if multi_pod
+                    else {"data": 16, "model": 16})
+    devices = int(np.prod(list(mesh.shape.values())))
+    model = build_model(cfg)
+    out: Dict[str, float] = {}
+
+    out["params"] = _per_device_bytes(model.specs, mesh, 2.0)  # bf16
+    B_loc = max(shape.global_batch // (mesh.shape.get("pod", 1) * mesh.shape["data"]), 1)
+    S_tot = shape.seq_len + cfg.meta_tokens + cfg.frontend_len
+
+    if shape.kind == "train":
+        from repro.models import param_count
+
+        n = param_count(model.specs)
+        if optimizer is None:
+            optimizer = "adamw8bit" if n > 5e10 else "adamw"
+        opt_item = 2.0 + 2 / 256 if optimizer == "adamw8bit" else 8.0
+        out["optimizer"] = _per_device_bytes(model.specs, mesh, opt_item)
+        out["grads_fp32"] = _per_device_bytes(model.specs, mesh, 4.0)
+        # saved layer-boundary activations (full remat): L x (B_loc, S, D) bf16
+        L = cfg.num_layers + cfg.encoder_layers
+        carry = L * B_loc * S_tot * cfg.d_model * 2.0
+        if shd._ACT_CTX.get("mesh") is not None:  # act-seq sharding lever
+            carry /= mesh.shape["model"]
+        out["saved_activations"] = carry
+        # logits block (B_loc, S, V/shard) bf16 + fp32 softmax transient
+        vshard = mesh.shape["model"] if cfg.padded_vocab % mesh.shape["model"] == 0 else 1
+        out["logits_transient"] = B_loc * S_tot * cfg.padded_vocab / vshard * 6.0
+        # one layer's transient under remat: attention chunk or MoE dispatch
+        h_loc = max(cfg.num_heads // mesh.shape["model"], 1) if cfg.num_heads else 1
+        if cfg.num_heads and cfg.num_heads % mesh.shape["model"] != 0:
+            h_loc = cfg.num_heads
+        s_sq = min(S_tot, 4096)
+        out["layer_transient"] = B_loc * h_loc * s_sq * min(s_sq, S_tot) * 4.0
+    else:
+        cache_len = shape.seq_len if shape.kind == "decode" else S_tot
+        cspecs = model.cache_specs(shape.global_batch, cache_len)
+        out["caches"] = _per_device_bytes(cspecs, mesh, 2.0)
+        vshard = mesh.shape["model"] if cfg.padded_vocab % mesh.shape["model"] == 0 else 1
+        q = 1 if shape.kind == "decode" else 256  # q-chunked prefill
+        h_loc = max(cfg.num_heads // mesh.shape["model"], 1) if cfg.num_heads else 1
+        if cfg.num_heads and cfg.num_heads % mesh.shape["model"] != 0:
+            h_loc = cfg.num_heads
+        out["logits_transient"] = B_loc * q * cfg.padded_vocab / vshard * 6.0
+        out["attn_transient"] = B_loc * h_loc * q * cache_len * 4.0
+
+    total = sum(out.values())
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "per_device_gb": {k: round(v / 1e9, 3) for k, v in out.items()},
+        "total_gb": round(total / 1e9, 2),
+        "fits_16gb": bool(total < 16e9),
+    }
+
+
+def main():
+    from repro.configs import all_cells
+
+    print("| arch | shape | mesh | total GB/dev | fits 16GB? | breakdown |")
+    print("|---|---|---|---|---|---|")
+    for arch, shape in all_cells():
+        for mp in (False, True):
+            r = analytic_memory_gb(arch, shape, mp)
+            big = {k: v for k, v in r["per_device_gb"].items() if v >= 0.1}
+            print(f"| {arch} | {shape} | {r['mesh']} | {r['total_gb']} | "
+                  f"{'yes' if r['fits_16gb'] else 'NO'} | {big} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell on the single-pod mesh:
+    compute term    = HLO_FLOPs / (chips * 197 TFLOP/s)      [bf16 v5e]
+    memory term     = HLO_bytes / (chips * 819 GB/s)
+    collective term = collective_bytes / (chips * 50 GB/s)    [per ICI link]
+
+The dry-run JSONs store PER-DEVICE quantities (the SPMD module is the
+per-device program), scan-corrected per launch/costing.py, so each term is
+simply per_device_quantity / per_chip_rate.  MODEL_FLOPS = 6*N*D (train)
+or 2*N*D (fwd-only), N = active params; the MODEL/HLO ratio flags remat
+and dispatch waste.
+"""
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link (1-link conservative)
+
+
+def active_param_count(arch: str) -> int:
+    """Params with expert weights discounted to top_k/num_experts."""
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.models.params import is_spec
+    import jax
+
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    total = 0
+    for spec in jax.tree.leaves(model.specs, is_leaf=is_spec):
+        n = int(np.prod(spec.shape))
+        if "experts" in (spec.axes or ()):
+            n = int(n * cfg.moe.top_k / cfg.moe.num_experts)
+        total += n
+    return total
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    from repro.configs.base import SHAPES_BY_NAME
+
+    shape = SHAPES_BY_NAME[shape_name]
+    n = active_param_count(arch)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def analyze(path: str) -> Optional[Dict]:
+    with open(path) as f:
+        d = json.load(f)
+    if d.get("status") != "ok":
+        return {"arch": d.get("arch"), "shape": d.get("shape"),
+                "mesh": d.get("mesh"), "status": "fail",
+                "error": d.get("error", "?")}
+    chips = d["devices"]
+    corr = d.get("corrected") or {}
+    flops_dev = corr.get("flops_total") or d.get("cost", {}).get("flops", 0)
+    bytes_dev = corr.get("bytes_total") or d.get("cost", {}).get("bytes_accessed", 0)
+    coll_dev = corr.get("collective_bytes_total") or d.get("collectives", {}).get("total_bytes", 0)
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(d["arch"], d["shape"])
+    hlo_global = flops_dev * chips
+    return {
+        "arch": d["arch"],
+        "shape": d["shape"],
+        "mesh": d["mesh"],
+        "status": "ok",
+        "chips": chips,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "step_time_bound_s": max(terms.values()),
+        "roofline_fraction": (
+            (mf / (chips * PEAK_FLOPS)) / max(terms.values())
+            if max(terms.values()) > 0 else 0.0
+        ),
+        "temp_bytes_per_dev": d.get("memory", {}).get("temp_bytes"),
+        "arg_bytes_per_dev": d.get("memory", {}).get("argument_bytes"),
+    }
+
+
+def load_all(dryrun_dir: str = "experiments/dryrun", mesh: str = "single") -> List[Dict]:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(dryrun_dir, f"*__{mesh}.json"))):
+        r = analyze(p)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = (
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL/HLO | roofline frac |\n|---|---|---|---|---|---|---|---|"
+    )
+    lines = [hdr]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL: {r['error'][:40]} | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    print("name,us_per_call,derived")
+    for r in load_all():
+        if r["status"] != "ok":
+            print(f"roofline_{r['arch']}_{r['shape']},0,FAIL")
+            continue
+        print(
+            f"roofline_{r['arch']}_{r['shape']},"
+            f"{r['step_time_bound_s']*1e6:.0f},"
+            f"dominant={r['dominant']};useful={r['useful_ratio']:.2f};"
+            f"frac={r['roofline_fraction']:.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

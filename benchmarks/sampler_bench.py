@@ -1,0 +1,78 @@
+"""Sampler micro-benchmark: throughput of each drawing strategy over a
+(B, K) grid — the paper's core operation isolated from LDA.
+
+Reports us per draw-batch and draws/s; plus the derived HBM-traffic model
+(bytes per sample) that grounds the TPU prediction for each method.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sample_categorical
+
+METHODS = ("prefix", "butterfly", "fenwick", "two_level", "gumbel")
+
+
+def _bench(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def traffic_model_bytes(K: int, W: int, method: str) -> float:
+    """Predicted HBM bytes per sample on TPU (fp32)."""
+    if method == "prefix":
+        return 4 * (K + K + np.log2(max(K, 2)) * 128)  # read + write prefix + search lines
+    if method in ("butterfly", "fenwick", "two_level"):
+        return 4 * (K + K / W + W)                      # read + block sums + one block
+    if method == "gumbel":
+        return 4 * K                                    # one pass (but K RNG + log on VPU)
+    return 4 * K
+
+
+def run(Bs=(4096,), Ks=(64, 256, 1024, 4096), W=32):
+    rows = []
+    rng = np.random.default_rng(0)
+    for B in Bs:
+        for K in Ks:
+            w = jnp.array(rng.uniform(0.1, 1.0, size=(B, K)).astype(np.float32))
+            u = jnp.array(rng.uniform(0, 1, size=(B,)).astype(np.float32))
+            key = jax.random.PRNGKey(0)
+            for method in METHODS:
+                if method == "gumbel":
+                    fn = jax.jit(lambda w, k: sample_categorical(w, key=k, method="gumbel"))
+                    t = _bench(fn, w, key)
+                else:
+                    fn = jax.jit(
+                        lambda w, u, m=method: sample_categorical(w, u=u, method=m, W=W)
+                    )
+                    t = _bench(fn, w, u)
+                rows.append(
+                    dict(
+                        B=B, K=K, method=method, us=t * 1e6,
+                        draws_per_s=B / t,
+                        model_bytes_per_sample=traffic_model_bytes(K, W, method),
+                    )
+                )
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for r in run():
+        print(
+            f"sampler_{r['method']}_B{r['B']}_K{r['K']},{r['us']:.0f},"
+            f"draws_per_s={r['draws_per_s']:.3g};"
+            f"model_bytes_per_sample={r['model_bytes_per_sample']:.0f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

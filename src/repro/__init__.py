@@ -1,0 +1,4 @@
+"""repro: butterfly-patterned partial-sums sampling (Steele & Tristan 2015)
+as a first-class feature of a multi-pod JAX training/serving framework."""
+
+__version__ = "1.0.0"

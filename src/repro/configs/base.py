@@ -1,0 +1,139 @@
+"""Model / run configuration schema.
+
+One ``ModelConfig`` describes any of the 10 assigned architectures (plus
+reduced smoke variants); ``ShapeConfig`` describes the assigned input-shape
+cells.  Everything the model code needs is derivable from here — configs
+are data, not code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    expert_d_ff: int = 1024
+    capacity_factor: float = 1.25
+    # routing group size in tokens: capacity (and the dispatch one-hots)
+    # are per-group, bounding dispatch memory at O(T * group * k * cf)
+    # regardless of sequence length
+    group_tokens: int = 4096
+    # Arctic-style parallel dense residual MLP (0 disables)
+    dense_residual_d_ff: int = 0
+    router_z_loss: float = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 128          # N
+    head_dim: int = 64            # P
+    num_heads: int = 32           # d_inner / P
+    conv_width: int = 4
+    chunk: int = 128              # SSD chunk length
+    expand: int = 2
+    n_groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | encdec | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None          # default d_model // num_heads
+    attention: str = "gqa"                  # gqa | mla | none
+    qk_norm: bool = False
+    attn_softcap: float = 0.0               # gemma2: 50.0
+    final_softcap: float = 0.0              # gemma2: 30.0
+    sliding_window: int = 0                 # gemma2 local layers: 4096
+    layer_pattern: str = "uniform"          # uniform | local_global (gemma2)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    act: str = "silu"                       # silu | gelu
+    tie_embeddings: bool = False
+    embedding_scale: bool = False           # gemma2: x * sqrt(d_model)
+    post_norms: bool = False                # gemma2 post-attn/post-ffn norms
+    mla: Optional[MLAConfig] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # encoder-decoder
+    encoder_layers: int = 0                 # >0 => encdec family
+    # frontends (stub): how many leading positions come as embeddings
+    frontend: str = "none"                  # none | audio | vision
+    frontend_len: int = 0                   # positions supplied as embeddings
+    # hymba: learned meta tokens prepended to every sequence
+    meta_tokens: int = 0
+    # hybrid/local attention: window for local layers (0 = all full attn)
+    local_window: int = 0
+    # MoE dispatch implementation (einsum = GShard baseline, gather = opt)
+    moe_dispatch: str = "einsum"
+    # pad embedding/unembedding tables to this multiple (0 = exact vocab);
+    # Megatron-style: odd vocabs (e.g. seamless 256206) shard after padding,
+    # padded logit columns are masked to -inf so loss/sampling are unchanged
+    pad_vocab_multiple: int = 0
+
+    @property
+    def padded_vocab(self) -> int:
+        if self.pad_vocab_multiple <= 0:
+            return self.vocab_size
+        m = self.pad_vocab_multiple
+        return ((self.vocab_size + m - 1) // m) * m
+    # paper technique: decode-time token sampler (two_level = the fused
+    # HBM-optimal variant, never worse than fenwick — EXPERIMENTS §Perf C3).
+    # W ~ sqrt(K) minimizes K/W + W; 128 is optimal at vocab scale
+    # (EXPERIMENTS §Perf W-sweep)
+    sampler_method: str = "two_level"
+    sampler_W: int = 128
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+# long_500k requires sub-quadratic sequence handling (spec: run only for
+# SSM / hybrid families; full-attention archs skip it — DESIGN.md §4).
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def shapes_for(config: ModelConfig) -> Tuple[ShapeConfig, ...]:
+    shapes = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if config.family in LONG_CONTEXT_FAMILIES:
+        shapes.append(LONG_500K)
+    return tuple(shapes)

@@ -1,0 +1,26 @@
+"""Core: butterfly-patterned partial sums for categorical sampling."""
+
+from repro.core.api import METHODS, sample_categorical, sample_from_logits
+from repro.core.butterfly import (
+    DEFAULT_W,
+    build_butterfly_table,
+    build_fenwick_table,
+    butterfly_rounds,
+    butterfly_search,
+    closed_form_table,
+    draw_butterfly,
+    draw_fenwick,
+    draw_two_level,
+    fenwick_search,
+    pad_to_multiple,
+)
+from repro.core.gumbel import draw_gumbel, draw_gumbel_logits
+from repro.core.reference import draw_linear_np, draw_prefix, prefix_sums
+
+__all__ = [
+    "METHODS", "DEFAULT_W", "sample_categorical", "sample_from_logits",
+    "build_butterfly_table", "build_fenwick_table", "butterfly_rounds",
+    "butterfly_search", "closed_form_table", "draw_butterfly", "draw_fenwick", "draw_two_level",
+    "fenwick_search", "pad_to_multiple", "draw_gumbel", "draw_gumbel_logits",
+    "draw_linear_np", "draw_prefix", "prefix_sums",
+]

@@ -1,0 +1,107 @@
+"""Walker/Vose alias method (paper §6 related work) as a JAX baseline.
+
+Preprocessing is O(K) but inherently sequential (two worklists); we express
+it with ``lax.while_loop`` over explicit array-backed stacks so it jits.
+Draws are O(1): one uniform picks a column, a second decides
+``k`` vs ``alias[k]``.  Useful when the same distribution is sampled many
+times (Li et al. 2014 amortization); the paper's setting — each table used
+*once* — is exactly where alias preprocessing cannot be amortized and the
+butterfly approach wins.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AliasTable(NamedTuple):
+    prob: jnp.ndarray   # (K,) acceptance probability for the home column
+    alias: jnp.ndarray  # (K,) fallback index
+
+
+def build_alias_table(weights: jnp.ndarray) -> AliasTable:
+    """Vose's O(K) construction for one distribution (1-D weights)."""
+    K = weights.shape[0]
+    w = weights.astype(jnp.float32)
+    scaled = w * (K / jnp.sum(w))
+    small_mask = scaled < 1.0
+    order = jnp.argsort(small_mask)  # large entries first, then small
+    n_small = jnp.sum(small_mask).astype(jnp.int32)
+    n_large = K - n_small
+    # stacks: indices of small entries and large entries
+    small = jnp.where(small_mask, jnp.arange(K), -1)
+    small = jnp.sort(jnp.where(small >= 0, small, K))[:K]
+    large = jnp.where(~small_mask, jnp.arange(K), -1)
+    large = jnp.sort(jnp.where(large >= 0, large, K))[:K]
+
+    def cond(state):
+        si, li = state[0], state[1]
+        ns, nl = state[7], state[8]
+        return jnp.logical_and(si < ns, li < nl)
+
+    def body(state):
+        si, li, scaled, prob, alias, small, large, n_small, n_large = state
+        s = small[si]
+        l = large[li]
+        prob = prob.at[s].set(scaled[s])
+        alias = alias.at[s].set(l)
+        leftover = scaled[l] - (1.0 - scaled[s])
+        scaled = scaled.at[l].set(leftover)
+        is_small = leftover < 1.0
+        # if the large entry became small, push it onto the small stack
+        small = small.at[n_small].set(jnp.where(is_small, l, small[n_small]))
+        n_small = n_small + jnp.where(is_small, 1, 0)
+        li = li + jnp.where(is_small, 1, 0)
+        si = si + 1
+        return (si, li, scaled, prob, alias, small, large, n_small, n_large)
+
+    prob = jnp.ones((K,), scaled.dtype)
+    alias = jnp.arange(K, dtype=jnp.int32)
+    small_pad = jnp.concatenate([small, jnp.zeros((K,), small.dtype)])[: 2 * K]
+    state = (
+        jnp.int32(0), jnp.int32(0), scaled, prob, alias,
+        small_pad, large, n_small, n_large,
+    )
+    state = jax.lax.while_loop(cond, body, state)
+    si, li, scaled, prob, alias, small_pad, large, n_small, n_large = state
+
+    # drain: anything left on either stack gets prob 1 (numerical leftovers)
+    def drain(stack, n, start, prob):
+        def body(i, prob):
+            idx = stack[i]
+            return jnp.where(
+                jnp.logical_and(i >= start, i < n),
+                prob.at[jnp.clip(idx, 0, K - 1)].set(1.0),
+                prob,
+            )
+        return jax.lax.fori_loop(0, stack.shape[0], body, prob)
+
+    prob = drain(small_pad, n_small, si, prob)
+    prob = drain(large, n_large, li, prob)
+    return AliasTable(prob=prob.astype(jnp.float32), alias=alias)
+
+
+build_alias_tables = jax.vmap(build_alias_table)  # over a (B, K) batch
+
+
+def draw_alias(table: AliasTable, key: jax.Array, shape=()) -> jnp.ndarray:
+    """O(1) draws from a single prebuilt table."""
+    K = table.prob.shape[0]
+    k_key, u_key = jax.random.split(key)
+    k = jax.random.randint(k_key, shape, 0, K)
+    u = jax.random.uniform(u_key, shape)
+    return jnp.where(u < table.prob[k], k, table.alias[k]).astype(jnp.int32)
+
+
+def draw_alias_batch(tables: AliasTable, key: jax.Array) -> jnp.ndarray:
+    """One draw per row of a batch of tables (B, K)."""
+    B, K = tables.prob.shape
+    k_key, u_key = jax.random.split(key)
+    k = jax.random.randint(k_key, (B,), 0, K)
+    u = jax.random.uniform(u_key, (B,))
+    home = jnp.take_along_axis(tables.prob, k[:, None], axis=1)[:, 0]
+    ali = jnp.take_along_axis(tables.alias, k[:, None], axis=1)[:, 0]
+    return jnp.where(u < home, k, ali).astype(jnp.int32)

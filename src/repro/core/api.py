@@ -1,0 +1,97 @@
+"""Public sampling API: one entry point, many strategies.
+
+``sample_categorical(weights, key=..., method=...)`` draws one index per row
+of a (B, K) non-negative weight matrix (unnormalized probabilities).
+
+Methods:
+  * ``butterfly`` — paper-faithful butterfly table + add/subtract walk
+  * ``fenwick``   — TPU-adapted per-sample dyadic table (DESIGN.md §2)
+  * ``kernel``    — fused two-pass Pallas kernel (interpret-mode on CPU)
+  * ``prefix``    — Alg. 1/3 full prefix sums + searchsorted (baseline)
+  * ``gumbel``    — Gumbel-max one-pass baseline
+  * ``alias``     — Walker/Vose alias tables (related-work baseline)
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import alias as _alias
+from repro.core import butterfly as _bfly
+from repro.core import gumbel as _gumbel
+from repro.core import reference as _ref
+
+METHODS = ("butterfly", "fenwick", "two_level", "kernel", "prefix", "gumbel", "alias")
+
+
+def sample_categorical(
+    weights: jnp.ndarray,
+    key: Optional[jax.Array] = None,
+    u: Optional[jnp.ndarray] = None,
+    method: str = "fenwick",
+    W: int = _bfly.DEFAULT_W,
+) -> jnp.ndarray:
+    """Draw one category index per row of ``weights``.
+
+    Either ``key`` (PRNG key; uniforms are derived internally) or ``u``
+    (precomputed uniforms, shape (B,)) must be given.  ``gumbel`` and
+    ``alias`` require ``key``.
+    """
+    weights = jnp.asarray(weights)
+    if weights.ndim == 1:
+        return sample_categorical(
+            weights[None], key=key, u=u, method=method, W=W
+        )[0]
+    B = weights.shape[0]
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; options: {METHODS}")
+    if method == "gumbel":
+        if key is None:
+            raise ValueError("gumbel requires a PRNG key")
+        return _gumbel.draw_gumbel(weights, key)
+    if method == "alias":
+        if key is None:
+            raise ValueError("alias requires a PRNG key")
+        tables = _alias.build_alias_tables(weights)
+        return _alias.draw_alias_batch(tables, key)
+    if u is None:
+        if key is None:
+            raise ValueError("need key or u")
+        u = jax.random.uniform(key, (B,), dtype=jnp.float32)
+    if method == "prefix":
+        return _ref.draw_prefix(weights, u)
+    if method == "butterfly":
+        return _bfly.draw_butterfly(weights, u, W=W)
+    if method == "two_level":
+        return _bfly.draw_two_level(weights, u, W=W)
+    if method == "kernel":
+        from repro.kernels.butterfly_sample import ops as _kops
+
+        return _kops.butterfly_sample(weights, u, W=W)
+    return _bfly.draw_fenwick(weights, u, W=W)
+
+
+def sample_from_logits(
+    logits: jnp.ndarray,
+    key: jax.Array,
+    temperature: float = 1.0,
+    method: str = "fenwick",
+    W: int = _bfly.DEFAULT_W,
+) -> jnp.ndarray:
+    """Serving-path helper: temperature sampling from (B, V) logits.
+
+    Converts to stable unnormalized probabilities then draws with the
+    requested strategy (greedy for temperature == 0).
+    """
+    logits = logits.astype(jnp.float32)
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if method == "gumbel":
+        return _gumbel.draw_gumbel_logits(logits / temperature, key)
+    z = logits / temperature
+    z = z - jnp.max(z, axis=-1, keepdims=True)
+    weights = jnp.exp(z)
+    return sample_categorical(weights, key=key, method=method, W=W)

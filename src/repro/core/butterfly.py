@@ -1,0 +1,335 @@
+"""Butterfly-patterned partial sums (Steele & Tristan 2015) — vectorized JAX.
+
+Two implementations of the paper's idea live here:
+
+1. ``paper-faithful`` — the exact butterfly table of Algorithm 8 (the
+   four-element replacement ``[[a,b],[c,d]] -> [[a,d],[a+b,c+d]]`` swept in
+   log2(W) rounds over W x W blocks, with ``shuffleXor`` realized as a lane
+   flip along the thread axis) and the exact add-or-subtract search walk of
+   Algorithms 9/10.  The table layout matches the paper's Figure 1/2
+   bit-for-bit (tests check the closed-form ``u_v^w`` characterization).
+
+2. ``fenwick`` — the TPU-adapted variant (see DESIGN.md §2): a per-sample
+   Blelloch up-sweep that stores, at position ``d`` with ``ntz(d+1) = l``,
+   the dyadic segment sum ``S[d-2^l+1 .. d]`` (classic Fenwick layout).  The
+   search is an add-only descent reading each sample's *own* row — no
+   cross-sample exchanges, O(W) instead of O(W log W) work per block, and
+   perfect VMEM locality on TPU.  Same memory footprint, same statistical
+   behaviour; this is the "beyond-paper" optimization benchmarked in
+   EXPERIMENTS.md.
+
+Glossary (paper -> here):
+  thread r        -> sample's index within a group of W ("warp")
+  topic k         -> category index within [0, K)
+  W x W block     -> a tile of W samples x W categories
+  p[W-1] of block -> running (cross-block) prefix of each sample's block sums
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_W = 32
+
+
+def _check_w(W: int) -> int:
+    if W < 2 or (W & (W - 1)) != 0:
+        raise ValueError(f"W must be a power of two >= 2, got {W}")
+    return int(np.log2(W))
+
+
+def pad_to_multiple(x: jnp.ndarray, axis: int, mult: int, value=0.0):
+    """Pad ``x`` along ``axis`` up to a multiple of ``mult`` with ``value``."""
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value), size
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful butterfly table (Algorithm 8)
+# ---------------------------------------------------------------------------
+
+
+def butterfly_rounds(blocks: jnp.ndarray, W: int) -> jnp.ndarray:
+    """Apply the log2(W) rounds of replacement computations to W x W blocks.
+
+    ``blocks[..., k, r]`` = theta-phi product of sample ``k`` for category
+    ``r`` of the block (the paper's "transposed products": register slot k of
+    thread r).  Returns the butterfly-patterned table; row W-1 holds each
+    sample's *block-local* total (column j = sample j), rows 0..W-2 hold
+    dyadic segment sums per the closed form (see ``closed_form_table``).
+    """
+    log2w = _check_w(W)
+    assert blocks.shape[-1] == W and blocks.shape[-2] == W
+    col = jnp.arange(W)  # thread id r, one per column
+    m = blocks
+    for b in range(log2w):
+        bit = 1 << b
+        rows_d = np.array([d for d in range(W - 1) if (d + 1) % (2 * bit) == bit])
+        a_d = m[..., rows_d, :]        # (..., P, W)
+        a_db = m[..., rows_d + bit, :]
+        col_has_bit = (col & bit).astype(bool)  # (W,)
+        # h = (r & bit) ? a[d] : a[d+bit]   (paper lines 22-24)
+        h = jnp.where(col_has_bit, a_d, a_db)
+        # v = shuffleXor(h, bit): exchange along the thread (column) axis.
+        P = len(rows_d)
+        v = (
+            h.reshape(h.shape[:-1] + (W // (2 * bit), 2, bit))[..., ::-1, :]
+            .reshape(h.shape)
+        )
+        # if (r & bit): a[d] <- a[d+bit]     (line 26-28)
+        new_d = jnp.where(col_has_bit, a_db, a_d)
+        # a[d+bit] <- a[d] + v               (line 29, uses updated a[d])
+        new_db = new_d + v
+        m = m.at[..., rows_d, :].set(new_d).at[..., rows_d + bit, :].set(new_db)
+    return m
+
+
+def build_butterfly_table(weights: jnp.ndarray, W: int = DEFAULT_W) -> jnp.ndarray:
+    """Build the paper's butterfly table for ``weights`` of shape (B, K).
+
+    B must be a multiple of W, K a multiple of W (use ``pad_to_multiple``).
+    Returns ``T`` of shape (G, nb, W, W) with G = B // W, nb = K // W; rows
+    0..W-2 are block-local butterfly entries, and row W-1 of block c holds
+    the *running* prefix (through block c) of each sample's block sums
+    (column j = sample j of the group), exactly like the paper's p[W-1]
+    accumulation (Alg. 8 lines 33-34).
+    """
+    B, K = weights.shape
+    if B % W or K % W:
+        raise ValueError(f"(B={B}, K={K}) must be multiples of W={W}; pad first")
+    G, nb = B // W, K // W
+    # blocks[g, c, k, r] = weights[g*W + k, c*W + r]
+    blocks = weights.reshape(G, W, nb, W).swapaxes(1, 2)
+    t = butterfly_rounds(blocks, W)
+    running = jnp.cumsum(t[:, :, W - 1, :], axis=1)
+    return t.at[:, :, W - 1, :].set(running)
+
+
+def closed_form_table(weights: jnp.ndarray, W: int = DEFAULT_W) -> jnp.ndarray:
+    """Oracle: the butterfly table computed directly from the paper's closed
+    form — entry (i, j) of a block holds ``u_v^w`` with
+    ``m = i ^ (i+1), k = m >> 1, u = (i & ~m) + (j & m), v = j & ~k,
+    w = v + k`` (block-local sums; row W-1 then carries the running prefix).
+    Used only by tests to pin the table layout to the paper's Figure 1/2.
+    """
+    B, K = weights.shape
+    G, nb = B // W, K // W
+    blocks = weights.reshape(G, W, nb, W).swapaxes(1, 2)  # (G, nb, Wk, Wr)
+    # inclusive block-local cumsum along categories
+    cs = jnp.cumsum(blocks, axis=-1)
+    i = np.arange(W)[:, None]
+    j = np.arange(W)[None, :]
+    mm = i ^ (i + 1)
+    kk = mm >> 1
+    u = (i & ~mm) + (j & mm)      # which sample the entry belongs to
+    v = j & ~kk                   # segment start
+    w = v + kk                    # segment end (inclusive)
+    # T[g, c, i, j] = cs[g, c, u, w] - (v > 0 ? cs[g, c, u, v-1] : 0)
+    seg_hi = cs[:, :, u, w]
+    lo_idx = np.maximum(v - 1, 0)
+    seg_lo = jnp.where(jnp.asarray(v > 0), cs[:, :, u, lo_idx], 0.0)
+    t = seg_hi - seg_lo
+    running = jnp.cumsum(t[:, :, W - 1, :], axis=1)
+    return t.at[:, :, W - 1, :].set(running)
+
+
+def butterfly_search(
+    table: jnp.ndarray, stop: jnp.ndarray, W: int = DEFAULT_W
+) -> jnp.ndarray:
+    """Algorithm 9/10: per-sample search of the butterfly table.
+
+    ``table``: (G, nb, W, W) from ``build_butterfly_table``.
+    ``stop``:  (G, W) the per-sample stop values (u * total).
+    Returns (G, W) int32 category indices.
+    """
+    log2w = _check_w(W)
+    G, nb = table.shape[0], table.shape[1]
+    r = jnp.arange(W)[None, :]                       # thread id within group
+    p_last = table[:, :, W - 1, :]                   # (G, nb, W) running sums
+    # Block-level search (Alg. 9 lines 8-15): smallest c with stop < p_last[c].
+    jb = jnp.sum(p_last <= stop[:, None, :], axis=1).astype(jnp.int32)
+    jb = jnp.clip(jb, 0, nb - 1)
+    lo = jnp.where(
+        jb > 0,
+        jnp.take_along_axis(p_last, jnp.maximum(jb - 1, 0)[:, None, :], axis=1)[:, 0],
+        jnp.zeros_like(stop),
+    )
+    hi = jnp.take_along_axis(p_last, jb[:, None, :], axis=1)[:, 0]
+
+    # In-block butterfly walk (Alg. 10), vectorized: at level ``bit`` the
+    # search reads the dyadic segment entry at row (r & ~m2) | (bit-1),
+    # column R | (r & m2) of its block, and either adds it to lowValue or
+    # subtracts it from highValue according to bit ``b`` of the sample id.
+    flat = table.reshape(G, nb * W * W)
+    R = jnp.zeros((G, W), dtype=jnp.int32)
+    for b in range(log2w - 1, -1, -1):
+        bit = 1 << b
+        m2 = 2 * bit - 1
+        i_row = (r & ~m2) | (bit - 1)
+        j_col = R | (r & m2)
+        idx = (jb * (W * W) + i_row * W + j_col).astype(jnp.int32)
+        y = jnp.take_along_axis(flat, idx, axis=1)
+        mid = jnp.where((r & bit) != 0, hi - y, lo + y)
+        go_low = stop < mid
+        hi = jnp.where(go_low, mid, hi)
+        lo = jnp.where(go_low, lo, mid)
+        R = jnp.where(go_low, R, R | bit)
+    return (jb * W + R).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# TPU-adapted variant: per-sample Fenwick (Blelloch up-sweep) table
+# ---------------------------------------------------------------------------
+
+
+def build_fenwick_table(weights: jnp.ndarray, W: int = DEFAULT_W) -> jnp.ndarray:
+    """Per-sample dyadic segment table (TPU-adapted butterfly, DESIGN.md §2).
+
+    ``weights``: (B, K), K a multiple of W.  Returns (B, K) where, within
+    each W-block, position d with ntz(d+1)=l holds ``S[d-2^l+1 .. d]`` and
+    position W-1 holds the *running* cross-block prefix.  Work: W-1 adds per
+    block (vs. the paper's O(W log W)) and zero cross-sample traffic.
+    """
+    log2w = _check_w(W)
+    B, K = weights.shape
+    if K % W:
+        raise ValueError(f"K={K} must be a multiple of W={W}; pad first")
+    nb = K // W
+    t = weights.reshape(B, nb, W)
+    for b in range(log2w):
+        bit = 1 << b
+        t2 = t.reshape(B, nb, W // (2 * bit), 2 * bit)
+        t2 = t2.at[..., 2 * bit - 1].add(t2[..., bit - 1])
+        t = t2.reshape(B, nb, W)
+    running = jnp.cumsum(t[..., W - 1], axis=1)
+    t = t.at[..., W - 1].set(running)
+    return t.reshape(B, K)
+
+
+def fenwick_search(
+    table: jnp.ndarray, stop: jnp.ndarray, W: int = DEFAULT_W
+) -> jnp.ndarray:
+    """Add-only descent over the per-sample Fenwick table.
+
+    ``table``: (B, K) from ``build_fenwick_table``; ``stop``: (B,).
+    Returns (B,) int32 indices.  Each sample touches only its own row:
+    1 + log2(W) gathers total.
+    """
+    log2w = _check_w(W)
+    B, K = table.shape
+    nb = K // W
+    p_last = table.reshape(B, nb, W)[..., W - 1]          # (B, nb)
+    jb = jnp.sum(p_last <= stop[:, None], axis=1).astype(jnp.int32)
+    jb = jnp.clip(jb, 0, nb - 1)
+    lo = jnp.where(
+        jb > 0,
+        jnp.take_along_axis(p_last, jnp.maximum(jb - 1, 0)[:, None], axis=1)[:, 0],
+        jnp.zeros_like(stop),
+    )
+    acc = lo
+    R = jnp.zeros((B,), dtype=jnp.int32)
+    base = jb * W
+    for b in range(log2w - 1, -1, -1):
+        bit = 1 << b
+        d = base + R + (bit - 1)
+        y = jnp.take_along_axis(table, d[:, None], axis=1)[:, 0]
+        mid = acc + y
+        go_high = stop >= mid
+        acc = jnp.where(go_high, mid, acc)
+        R = jnp.where(go_high, R + bit, R)
+    return (base + R).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end draws
+# ---------------------------------------------------------------------------
+
+
+def _prep(weights: jnp.ndarray, W: int, group_pad: bool):
+    """Pad categories (zeros) and, for the paper layout, samples."""
+    weights = jnp.asarray(weights)
+    if weights.dtype not in (jnp.float32, jnp.float64):
+        weights = weights.astype(jnp.float32)
+    w_padded, K = pad_to_multiple(weights, axis=1, mult=W, value=0.0)
+    if group_pad:
+        # dummy samples draw from a uniform singleton; discarded afterwards
+        w_padded, B = pad_to_multiple(w_padded, axis=0, mult=W, value=0.0)
+        if w_padded.shape[0] != B:
+            w_padded = w_padded.at[B:, 0].set(1.0)
+        return w_padded, B, K
+    return w_padded, weights.shape[0], K
+
+
+@functools.partial(jax.jit, static_argnames=("W",))
+def draw_butterfly(
+    weights: jnp.ndarray, u: jnp.ndarray, W: int = DEFAULT_W
+) -> jnp.ndarray:
+    """Draw one index per row of ``weights`` using the paper-faithful path.
+
+    ``weights``: (B, K) non-negative; ``u``: (B,) uniforms in [0, 1).
+    """
+    wp, B, K = _prep(weights, W, group_pad=True)
+    G = wp.shape[0] // W
+    table = build_butterfly_table(wp, W)
+    totals = table[:, -1, W - 1, :]                       # (G, W)
+    up, _ = pad_to_multiple(u.astype(wp.dtype), axis=0, mult=W, value=0.5)
+    stop = totals * up.reshape(G, W)
+    idx = butterfly_search(table, stop, W).reshape(-1)[:B]
+    return jnp.minimum(idx, K - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("W",))
+def draw_fenwick(
+    weights: jnp.ndarray, u: jnp.ndarray, W: int = DEFAULT_W
+) -> jnp.ndarray:
+    """Draw one index per row using the TPU-adapted Fenwick path."""
+    wp, B, K = _prep(weights, W, group_pad=False)
+    table = build_fenwick_table(wp, W)
+    totals = table.reshape(B, -1, W)[:, -1, W - 1]
+    stop = totals * u.astype(wp.dtype)
+    idx = fenwick_search(table, stop, W)
+    return jnp.minimum(idx, K - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("W",))
+def draw_two_level(
+    weights: jnp.ndarray, u: jnp.ndarray, W: int = DEFAULT_W
+) -> jnp.ndarray:
+    """Fused two-level draw: the pure-XLA twin of the Pallas kernel.
+
+    Pass 1 reduces the weights to (B, K/W) block sums (never materializing
+    any K-length prefix table); pass 2 binary-searches the running block
+    sums, gathers ONLY the selected W-block per sample, and finishes with
+    an in-block cumsum + search.  Work: O(K) reads + O(K/W) writes + O(W)
+    per sample — strictly less than the full-prefix route on any backend,
+    and the HBM-traffic-optimal layout on TPU (DESIGN.md §2).
+    """
+    wp, B, K = _prep(weights, W, group_pad=False)
+    nb = wp.shape[1] // W
+    blocks = wp.reshape(B, nb, W)
+    running = jnp.cumsum(blocks.sum(axis=-1), axis=1)          # (B, nb)
+    totals = running[:, -1]
+    stop = totals * u.astype(wp.dtype)
+    jb = jnp.clip(
+        jnp.sum(running <= stop[:, None], axis=1).astype(jnp.int32), 0, nb - 1
+    )
+    lo = jnp.where(
+        jb > 0,
+        jnp.take_along_axis(running, jnp.maximum(jb - 1, 0)[:, None], axis=1)[:, 0],
+        jnp.zeros_like(stop),
+    )
+    sel = jnp.take_along_axis(blocks, jb[:, None, None], axis=1)[:, 0]   # (B, W)
+    prefix = jnp.cumsum(sel, axis=-1) + lo[:, None]
+    r = jnp.sum(prefix <= stop[:, None], axis=1).astype(jnp.int32)
+    idx = jb * W + jnp.minimum(r, W - 1)
+    return jnp.minimum(idx, K - 1)

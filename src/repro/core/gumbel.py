@@ -1,0 +1,32 @@
+"""Gumbel-max baseline: the idiomatic one-pass TPU categorical sampler.
+
+``argmax(log w + G)`` with G ~ Gumbel(0,1).  Needs K uniforms per draw (vs.
+one for the prefix/butterfly family) but is a single reduction pass — this
+is the default the butterfly path must beat on HBM traffic (see
+EXPERIMENTS.md §Perf: butterfly reads weights once and writes B*K/W block
+sums; Gumbel reads weights once and writes nothing, but burns K RNG draws
+and a full log per element, making it compute-hotter on the VPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def draw_gumbel(weights: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    weights = jnp.asarray(weights)
+    if weights.dtype not in (jnp.float32, jnp.float64):
+        weights = weights.astype(jnp.float32)
+    logw = jnp.log(jnp.maximum(weights, jnp.finfo(weights.dtype).tiny))
+    g = jax.random.gumbel(key, weights.shape, dtype=weights.dtype)
+    masked = jnp.where(weights > 0, logw + g, -jnp.inf)
+    return jnp.argmax(masked, axis=-1).astype(jnp.int32)
+
+
+@jax.jit
+def draw_gumbel_logits(logits: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    """Same but from logits (serving path convenience)."""
+    g = jax.random.gumbel(key, logits.shape, dtype=jnp.float32)
+    return jnp.argmax(logits.astype(jnp.float32) + g, axis=-1).astype(jnp.int32)

@@ -1,0 +1,48 @@
+"""Algorithm 1/3 oracle: full prefix sums + binary search (searchsorted).
+
+This is the baseline the paper optimizes *from* — and the correctness oracle
+every other sampler implementation (vectorized butterfly, Fenwick,
+Pallas kernel) is validated against.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def prefix_sums(weights: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive prefix sums along the last axis (Alg. 1 lines 11-15)."""
+    return jnp.cumsum(weights, axis=-1)
+
+
+@jax.jit
+def draw_prefix(weights: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Draw per-row indices: smallest j with ``stop < P[j]``, stop = u*P[-1].
+
+    ``weights``: (B, K) non-negative, ``u``: (B,) in [0,1).
+    """
+    weights = jnp.asarray(weights)
+    if weights.dtype not in (jnp.float32, jnp.float64):
+        weights = weights.astype(jnp.float32)
+    p = prefix_sums(weights)
+    stop = p[:, -1] * u.astype(p.dtype)
+    idx = jax.vmap(lambda row, s: jnp.searchsorted(row, s, side="right"))(p, stop)
+    return jnp.minimum(idx, weights.shape[-1] - 1).astype(jnp.int32)
+
+
+def draw_linear_np(weights: np.ndarray, u: np.ndarray) -> np.ndarray:
+    """Pure-numpy scalar-loop linear search (Alg. 2) — oracle of the oracle."""
+    weights = np.asarray(weights, dtype=np.float64)
+    out = np.zeros(weights.shape[0], dtype=np.int32)
+    for b in range(weights.shape[0]):
+        p = np.cumsum(weights[b])
+        stop = p[-1] * u[b]
+        j = 0
+        while j < len(p) - 1 and stop >= p[j]:
+            j += 1
+        out[b] = j
+    return out

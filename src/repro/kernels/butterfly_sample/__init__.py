@@ -1,0 +1,3 @@
+from repro.kernels.butterfly_sample.ops import butterfly_sample
+
+__all__ = ["butterfly_sample"]

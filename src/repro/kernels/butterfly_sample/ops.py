@@ -1,0 +1,29 @@
+"""Public wrapper for the fused butterfly_sample Pallas kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.butterfly_sample.kernel import butterfly_sample_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def butterfly_sample(
+    weights,
+    u,
+    W: int = 32,
+    tb: int = 8,
+    tk: int = 512,
+    interpret: bool | None = None,
+):
+    """Fused two-pass categorical draw: (B, K) weights, (B,) uniforms -> (B,).
+
+    HBM-optimal on TPU: reads weights once + B*W re-read, writes only
+    B*K/W block sums (see kernel.py docstring).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    return butterfly_sample_pallas(weights, u, W=W, tb=tb, tk=tk, interpret=interpret)

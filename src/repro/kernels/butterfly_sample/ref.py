@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for butterfly_sample: full prefix sums + searchsorted
+(Alg. 1/3 of the paper), self-contained."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def butterfly_sample_ref(weights: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    w = weights.astype(jnp.float32)
+    p = jnp.cumsum(w, axis=-1)
+    stop = p[:, -1] * u.astype(jnp.float32)
+    idx = jax.vmap(lambda row, s: jnp.searchsorted(row, s, side="right"))(p, stop)
+    return jnp.minimum(idx, w.shape[-1] - 1).astype(jnp.int32)

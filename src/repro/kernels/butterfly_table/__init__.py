@@ -1,0 +1,3 @@
+from repro.kernels.butterfly_table.ops import butterfly_table
+
+__all__ = ["butterfly_table"]

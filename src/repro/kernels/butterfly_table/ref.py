@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the butterfly_table kernel.
+
+Self-contained (no dependency on the kernel): computes the table from the
+paper's closed form — entry (i, j) of a W x W block holds ``u_v^w`` with
+``m = i^(i+1), k = m>>1, u = (i & ~m) + (j & m), v = j & ~k, w = v + k``,
+and row W-1 carries the running cross-block per-sample prefix.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def butterfly_table_ref(weights: jnp.ndarray, W: int = 32) -> jnp.ndarray:
+    B, K = weights.shape
+    assert B % W == 0 and K % W == 0
+    G, nb = B // W, K // W
+    blocks = weights.astype(jnp.float32).reshape(G, W, nb, W).swapaxes(1, 2)
+    cs = jnp.cumsum(blocks, axis=-1)
+    i = np.arange(W)[:, None]
+    j = np.arange(W)[None, :]
+    m = i ^ (i + 1)
+    k = m >> 1
+    u = (i & ~m) + (j & m)
+    v = j & ~k
+    w = v + k
+    hi = cs[:, :, u, w]
+    lo = jnp.where(jnp.asarray(v > 0), cs[:, :, u, np.maximum(v - 1, 0)], 0.0)
+    t = hi - lo
+    running = jnp.cumsum(t[:, :, W - 1, :], axis=1)
+    t = t.at[:, :, W - 1, :].set(running)
+    # back to (B, K) layout: block (g, c) occupies rows gW.., cols cW..
+    return t.swapaxes(1, 2).reshape(B, K)

@@ -1,0 +1,3 @@
+from repro.kernels.lda_draw.ops import lda_draw
+
+__all__ = ["lda_draw"]

@@ -1,0 +1,94 @@
+"""Fused LDA z-draw kernel — the paper's inner loop as ONE Pallas kernel.
+
+The paper's Algorithm 8 *fuses* the theta-phi product with the butterfly
+table construction so the (B, K) relative-probability table never round-trips
+through main memory.  This kernel is the TPU-native statement of that fusion:
+
+  * the data-dependent fetch of ``phi[w[m], :]`` — the memory-coalescing
+    problem the paper's warp-transposed loads solve — becomes a
+    **scalar-prefetch-driven BlockSpec index_map**: the word id selects the
+    phi row, and the Pallas pipeline DMAs exactly that row into VMEM
+    (contiguous, double-buffered — the hardware-native "coalesced" gather);
+  * theta row x phi row -> weights, per-W-block sums, block selection and
+    the in-block dyadic walk all happen in registers/VMEM;
+  * HBM traffic per sample: theta row (K) + one phi row (K) + nothing else.
+    The unfused pipeline (materialize weights, then sample) pays >= 3K.
+
+Grid is (B,): one sample per step; K (padded to a multiple of W) must fit
+VMEM — true by construction for LDA (K <= ~1k topics).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _draw_kernel(words_ref, theta_ref, phi_row_ref, u_ref, out_ref, *, W: int, K: int):
+    log2w = int(np.log2(W))
+    nb = K // W
+    # fused theta-phi product (the paper's line 16), fp32 accumulation
+    w = theta_ref[0, :].astype(jnp.float32) * phi_row_ref[0, :].astype(jnp.float32)
+    blocks = w.reshape(nb, W)
+    running = jnp.cumsum(blocks.sum(axis=1))
+    total = running[nb - 1]
+    stop = total * u_ref[0, 0]
+    jb = jnp.clip(jnp.sum(running <= stop).astype(jnp.int32), 0, nb - 1)
+    lo = jnp.where(jb > 0, running[jnp.maximum(jb - 1, 0)], 0.0)
+    sel = jax.lax.dynamic_index_in_dim(blocks, jb, axis=0, keepdims=False)  # (W,)
+    # in-register dyadic table (TPU-adapted butterfly) + add-only descent
+    t = sel
+    for b in range(log2w):
+        bit = 1 << b
+        t2 = t.reshape(W // (2 * bit), 2 * bit)
+        t2 = t2.at[:, 2 * bit - 1].add(t2[:, bit - 1])
+        t = t2.reshape(W)
+    acc = lo
+    R = jnp.int32(0)
+    for b in range(log2w - 1, -1, -1):
+        bit = 1 << b
+        y = jax.lax.dynamic_index_in_dim(t, R + (bit - 1), keepdims=False)
+        mid = acc + y
+        go = stop >= mid
+        acc = jnp.where(go, mid, acc)
+        R = jnp.where(go, R + bit, R)
+    out_ref[0, 0] = jb * W + R
+
+
+@functools.partial(jax.jit, static_argnames=("W", "interpret"))
+def lda_draw_pallas(
+    theta: jnp.ndarray,   # (B, K) per-sample topic weights
+    phi: jnp.ndarray,     # (V, K) word-topic weights
+    words: jnp.ndarray,   # (B,) int32 word ids
+    u: jnp.ndarray,       # (B,) uniforms
+    W: int = 32,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, K = theta.shape
+    padK = (-K) % W
+    if padK:
+        theta = jnp.pad(theta, ((0, 0), (0, padK)))
+        phi = jnp.pad(phi, ((0, 0), (0, padK)))
+    Kp = K + padK
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Kp), lambda b, words_ref: (b, 0)),          # theta row
+            pl.BlockSpec((1, Kp), lambda b, words_ref: (words_ref[b], 0)),  # phi row!
+            pl.BlockSpec((1, 1), lambda b, words_ref: (b, 0)),           # u
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, words_ref: (b, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_draw_kernel, W=W, K=Kp),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        interpret=interpret,
+    )(words.astype(jnp.int32), theta, phi, u.astype(jnp.float32)[:, None])
+    return jnp.minimum(out[:, 0], K - 1)

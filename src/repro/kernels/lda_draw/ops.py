@@ -1,0 +1,17 @@
+"""Public wrapper for the fused LDA z-draw kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.lda_draw.kernel import lda_draw_pallas
+
+
+def lda_draw(theta, phi, words, u, W: int = 32, interpret: bool | None = None):
+    """Fused draw: z[b] ~ Categorical(theta[b,:] * phi[words[b],:]).
+
+    One kernel: the weights table never exists in HBM (DESIGN.md §2).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return lda_draw_pallas(theta, phi, words, u, W=W, interpret=interpret)

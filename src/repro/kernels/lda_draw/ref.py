@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused LDA z-draw kernel: materialize the
+theta-phi weights, full prefix sums, searchsorted (paper Alg. 1/3)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lda_draw_ref(theta, phi, words, u):
+    w = theta.astype(jnp.float32) * phi[words].astype(jnp.float32)  # (B, K)
+    p = jnp.cumsum(w, axis=-1)
+    stop = p[:, -1] * u.astype(jnp.float32)
+    idx = jax.vmap(lambda row, s: jnp.searchsorted(row, s, side="right"))(p, stop)
+    return jnp.minimum(idx, w.shape[-1] - 1).astype(jnp.int32)

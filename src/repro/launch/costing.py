@@ -1,0 +1,240 @@
+"""Scan-aware cost accounting for the dry-run.
+
+XLA's cost_analysis counts a while/scan body ONCE (verified empirically:
+flops(L=2) == flops(L=8) for a scanned stack), so the scanned train-step
+module underreports per-step FLOPs/bytes/collective-bytes by ~L x.  We
+therefore compile ONE ISOLATED LAYER BODY — same shapes, same shardings,
+same remat policy as the in-scan body — and report
+
+    total = scanned_module_cost + (L - 1) * body_cost
+
+(for enc-dec: one body per stack).  The isolated train body is
+value_and_grad through a jax.checkpoint'd layer, which costs 2*fwd + bwd —
+exactly the fwd-scan body (1 fwd) plus the remat bwd-scan body (fwd+bwd).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist import sharding as shd
+from repro.models import abstract_params, logical_axes
+from repro.models import encdec as ed
+from repro.models import transformer as tf
+
+
+def _cost_of(compiled) -> Dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        }
+    except Exception as e:
+        return {"flops": 0.0, "bytes_accessed": 0.0, "error": str(e)}
+
+
+def _x_sharding(mesh, rules):
+    return shd.named_sharding((1, 1, 1), ("batch", "seq", None), mesh, rules)
+
+
+def body_cost(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh,
+    rules,
+    kind: str,
+    stack: str = "decoder",
+) -> Dict:
+    """Compile one layer body at cell geometry; return cost + collectives.
+
+    Attention is forced DENSE here: the chunked path's inner q-scan would be
+    trip-count-undercounted by cost_analysis exactly like the layer scan.
+    (The cell's *memory* numbers still come from the scanned+chunked module;
+    only FLOP/byte/collective accounting uses the dense body.)
+    """
+    from repro.launch.dryrun import collective_bytes  # avoid cycle
+    from repro.models import attention as attn_mod
+
+    old_threshold = attn_mod.CHUNKED_THRESHOLD
+    attn_mod.CHUNKED_THRESHOLD = 1 << 30
+    try:
+        return _body_cost_inner(cfg, shape, mesh, rules, kind, stack, collective_bytes)
+    finally:
+        attn_mod.CHUNKED_THRESHOLD = old_threshold
+
+
+def _body_cost_inner(cfg, shape, mesh, rules, kind, stack, collective_bytes) -> Dict:
+
+    B = shape.global_batch
+    if cfg.encoder_layers > 0:
+        S_text = shape.seq_len // 2
+    elif cfg.frontend_len > 0:
+        S_text = shape.seq_len - cfg.frontend_len
+    else:
+        S_text = shape.seq_len
+    S_full = S_text + cfg.meta_tokens + cfg.frontend_len
+    if cfg.encoder_layers > 0 and stack == "encoder":
+        S_full = shape.seq_len - S_text
+
+    if stack == "encoder":
+        lspec = ed._enc_layer_spec(cfg)
+    elif stack == "encdec_decoder":
+        lspec = ed._dec_layer_spec(cfg)
+    else:
+        lspec = tf.layer_spec(cfg)
+    ap = abstract_params(lspec, jnp.bfloat16)
+    p_shard = shd.tree_shardings(ap, logical_axes(lspec), mesh, rules)
+
+    dt = jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+
+    if kind == "train":
+        x_in = sds((B, S_full, cfg.d_model), dt)
+        positions = jnp.arange(S_full)
+
+        def body(lp, x):
+            def inner(lp, x):
+                if stack == "encoder":
+                    y = _enc_body(cfg, lp, x, positions)
+                elif stack == "encdec_decoder":
+                    y = _encdec_dec_body(cfg, lp, x, positions)
+                else:
+                    y, _, aux = tf.layer_apply(cfg, lp, x, positions, jnp.int32(0))
+                return jnp.sum(y.astype(jnp.float32) ** 2)
+
+            inner = jax.checkpoint(
+                inner, policy=jax.checkpoint_policies.nothing_saveable
+            )
+            return jax.value_and_grad(inner, argnums=(0, 1))(lp, x)
+
+        fn = jax.jit(
+            body,
+            in_shardings=(p_shard, shd.named_sharding((B, S_full, cfg.d_model), ("batch", "seq", None), mesh, rules)),
+        )
+        compiled = fn.lower(ap, x_in).compile()
+    elif kind == "prefill":
+        x_in = sds((B, S_full, cfg.d_model), dt)
+        positions = jnp.arange(S_full)
+
+        def body(lp, x):
+            if stack == "encoder":
+                return _enc_body(cfg, lp, x, positions)
+            if stack == "encdec_decoder":
+                return _encdec_dec_body(cfg, lp, x, positions)
+            y, cache, _ = tf.layer_apply(cfg, lp, x, positions, jnp.int32(0))
+            return y, cache
+
+        fn = jax.jit(
+            body,
+            in_shardings=(p_shard, shd.named_sharding((B, S_full, cfg.d_model), ("batch", "seq", None), mesh, rules)),
+        )
+        compiled = fn.lower(ap, x_in).compile()
+    else:  # decode
+        cache_len = shape.seq_len + cfg.meta_tokens + cfg.frontend_len
+        if stack == "encdec_decoder":
+            lc = {k: v for k, v in ed.encdec_cache_specs(cfg, B, cache_len).items()}
+            # single-layer slice of the stacked spec
+            import dataclasses as dc
+
+            lc = {
+                k: dc.replace(v, shape=v.shape[1:], axes=v.axes[1:])
+                for k, v in lc.items()
+            }
+        else:
+            lc = tf.layer_cache_spec(cfg, B, cache_len)
+        ac = abstract_params(lc, jnp.bfloat16)
+        c_shard = shd.tree_shardings(ac, logical_axes(lc), mesh, rules)
+        x_in = sds((B, 1, cfg.d_model), dt)
+        positions = jnp.arange(1)
+
+        def body(lp, x, cache):
+            if stack == "encdec_decoder":
+                return _encdec_dec_decode_body(cfg, lp, x, cache)
+            y, cache, _ = tf.layer_apply(
+                cfg, lp, x, positions + 7, jnp.int32(0), cache=cache,
+                cache_pos=jnp.int32(7),
+            )
+            return y, cache
+
+        fn = jax.jit(
+            body,
+            in_shardings=(p_shard, shd.named_sharding((B, 1, cfg.d_model), ("batch", None, None), mesh, rules), c_shard),
+        )
+        compiled = fn.lower(ap, x_in, ac).compile()
+
+    out = _cost_of(compiled)
+    out["collectives"] = collective_bytes(compiled.as_text())
+    return out
+
+
+def _enc_body(cfg, lp, x, positions):
+    from repro.models import attention as attn
+    from repro.models.layers import mlp, rmsnorm
+
+    h = rmsnorm(lp["ln_attn"], x, cfg.norm_eps)
+    y, _ = attn.gqa_attend(lp["attn"], h, positions, cfg, causal=False)
+    x = x + y
+    h = rmsnorm(lp["ln_mlp"], x, cfg.norm_eps)
+    return x + mlp(lp["mlp"], h, cfg.act)
+
+
+def _encdec_dec_body(cfg, lp, x, positions):
+    from repro.models import attention as attn
+    from repro.models.layers import mlp, rmsnorm
+
+    h = rmsnorm(lp["ln_self"], x, cfg.norm_eps)
+    y, _ = attn.gqa_attend(lp["self_attn"], h, positions, cfg, causal=True)
+    x = x + y
+    # cross-attend against a same-length memory stand-in
+    memory = jnp.zeros_like(x)
+    kv = attn.cross_memory(lp["cross_attn"], memory, cfg)
+    h = rmsnorm(lp["ln_cross"], x, cfg.norm_eps)
+    x = x + attn.cross_attend(lp["cross_attn"], h, kv, cfg)
+    h = rmsnorm(lp["ln_mlp"], x, cfg.norm_eps)
+    return x + mlp(lp["mlp"], h, cfg.act)
+
+
+def _encdec_dec_decode_body(cfg, lp, x, cache):
+    from repro.models import attention as attn
+    from repro.models.layers import mlp, rmsnorm
+
+    positions = jnp.arange(1) + 7
+    h = rmsnorm(lp["ln_self"], x, cfg.norm_eps)
+    y, self_cache = attn.gqa_attend(
+        lp["self_attn"], h, positions, cfg, causal=False,
+        cache={"k": cache["self_k"], "v": cache["self_v"]}, cache_pos=jnp.int32(7),
+    )
+    x = x + y
+    h = rmsnorm(lp["ln_cross"], x, cfg.norm_eps)
+    x = x + attn.cross_attend(lp["cross_attn"], h, (cache["cross_k"], cache["cross_v"]), cfg)
+    h = rmsnorm(lp["ln_mlp"], x, cfg.norm_eps)
+    x = x + mlp(lp["mlp"], h, cfg.act)
+    return x, {**cache, "self_k": self_cache["k"], "self_v": self_cache["v"]}
+
+
+def corrected_totals(scanned: Dict, cfg: ModelConfig, bodies: Dict[str, Dict]) -> Dict:
+    """total = scanned + (L-1) * body per stack."""
+    flops = scanned.get("cost", {}).get("flops", 0.0)
+    bytes_ = scanned.get("cost", {}).get("bytes_accessed", 0.0)
+    coll = dict(scanned.get("collectives", {}))
+    coll_total = coll.get("total_bytes", 0.0)
+    for stack, body in bodies.items():
+        L = cfg.encoder_layers if stack == "encoder" else cfg.num_layers
+        mult = max(L - 1, 0)
+        flops += mult * body.get("flops", 0.0)
+        bytes_ += mult * body.get("bytes_accessed", 0.0)
+        coll_total += mult * body.get("collectives", {}).get("total_bytes", 0.0)
+    return {
+        "flops_total": flops,
+        "bytes_total": bytes_,
+        "collective_bytes_total": coll_total,
+    }

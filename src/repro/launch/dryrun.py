@@ -1,0 +1,392 @@
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices; jax
+# locks the device count on first init, so this MUST precede every import.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds abstract inputs (ShapeDtypeStruct — zero
+allocation), resolves shardings through the logical-axis rules engine,
+lowers the jitted step under the production mesh, compiles, and records
+memory_analysis / cost_analysis / per-collective byte counts to JSON for
+EXPERIMENTS.md §Dry-run and the roofline in benchmarks/roofline.py.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, all_cells, get_config
+from repro.configs.base import SHAPES_BY_NAME, ModelConfig, ShapeConfig
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import abstract_params, build_model, logical_axes, param_count
+from repro.models.params import is_spec
+from repro.serve.engine import make_prefill_step, make_serve_step
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no device allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32, u32, bf16 = jnp.int32, jnp.uint32, jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+    if cfg.encoder_layers > 0:
+        se = S // 2
+        batch = {
+            "src_embeds": sds((B, se, cfg.d_model), bf16),
+            "tgt_tokens": sds((B, S - se), i32),
+        }
+    elif cfg.frontend_len > 0:
+        batch = {
+            "tokens": sds((B, S - cfg.frontend_len), i32),
+            "frontend_embeds": sds((B, cfg.frontend_len, cfg.d_model), bf16),
+        }
+    else:
+        batch = {"tokens": sds((B, S), i32)}
+    if shape.kind == "decode":
+        return {
+            "token": sds((B, 1), i32),
+            "pos": sds((), i32),
+            "seed": sds((), u32),
+        }
+    if shape.kind == "prefill":
+        return {"batch": batch, "seed": sds((), u32)}
+    return {"batch": batch, "step": sds((), i32)}
+
+
+def _batch_shardings(batch_specs, mesh):
+    def leaf(sds):
+        nd = len(sds.shape)
+        axes = ("batch",) + ("seq",) * (nd >= 2) + (None,) * max(nd - 2, 0)
+        return shd.named_sharding(sds.shape, axes[:nd], mesh)
+
+    return jax.tree.map(leaf, batch_specs)
+
+
+def _replicated(mesh):
+    return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+
+
+def pick_optimizer_name(cfg: ModelConfig) -> str:
+    # 8-bit moments when fp32 m+v would not fit 256 chips (arctic-class)
+    model = build_model(cfg)
+    return "adamw8bit" if param_count(model.specs) > 5e10 else "adamw"
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    compile_: bool = True,
+    moe_dispatch: Optional[str] = None,
+    extra_rules: Optional[list] = None,
+    remat: str = "full",
+    act_seq_shard: bool = False,
+    no_fsdp: bool = False,
+    pad_vocab: int = 0,
+    sampler: Optional[str] = None,
+    chunked_threshold: Optional[int] = None,
+):
+    """Lower (and optionally compile) one cell.  Returns result dict."""
+    import dataclasses
+
+    cfg = get_config(arch)
+    if moe_dispatch and cfg.moe is not None:
+        cfg = dataclasses.replace(cfg, moe_dispatch=moe_dispatch)
+    if pad_vocab:
+        cfg = dataclasses.replace(cfg, pad_vocab_multiple=pad_vocab)
+    if sampler:
+        cfg = dataclasses.replace(cfg, sampler_method=sampler)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = (extra_rules or []) + shd.DEFAULT_RULES
+    if no_fsdp:
+        rules = shd.override_rules({"embed": None}, rules)
+    shd.set_activation_sharding(mesh if act_seq_shard else None)
+    from repro.models import attention as attn_mod
+    old_thresh = attn_mod.CHUNKED_THRESHOLD
+    if chunked_threshold is not None:
+        attn_mod.CHUNKED_THRESHOLD = chunked_threshold
+    model = build_model(cfg)
+
+    specs = model.specs
+    aparams = abstract_params(specs, jnp.bfloat16)
+    axes = logical_axes(specs)
+    p_shard = shd.tree_shardings(aparams, axes, mesh, rules)
+    ins = input_specs(cfg, shape)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            opt_name = pick_optimizer_name(cfg)
+            opt = make_optimizer(opt_name, lr=3e-4)
+            ostate = opt.state_specs(specs)
+            o_axes = shd.optimizer_state_axes(opt_name, axes)
+            o_shard = shd.tree_shardings(ostate, o_axes, mesh, rules)
+            b_shard = _batch_shardings(ins["batch"], mesh)
+            step = make_train_step(model, opt, remat=remat)
+            fn = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard, _replicated(mesh)),
+                out_shardings=(p_shard, o_shard, _replicated(mesh)),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(aparams, ostate, ins["batch"], ins["step"])
+        elif shape.kind == "prefill":
+            pstep = make_prefill_step(model)
+
+            def prefill(params, batch, seed):
+                key = jax.random.PRNGKey(seed)
+                tok, caches = pstep(params, batch, key)
+                return tok, caches
+
+            b_shard = _batch_shardings(ins["batch"], mesh)
+            tok_shard = shd.named_sharding((shape.global_batch,), ("batch",), mesh, rules)
+            fn = jax.jit(
+                prefill,
+                in_shardings=(p_shard, b_shard, _replicated(mesh)),
+                out_shardings=(tok_shard, None),
+            )
+            lowered = fn.lower(aparams, ins["batch"], ins["seed"])
+        else:  # decode
+            sstep = make_serve_step(model)
+
+            def decode(params, caches, token, pos, seed):
+                key = jax.random.PRNGKey(seed)
+                return sstep(params, caches, token, pos, key)
+
+            cache_len = shape.seq_len
+            cspecs = model.cache_specs(shape.global_batch, cache_len)
+            acaches = abstract_params(cspecs, jnp.bfloat16)
+            c_axes = logical_axes(cspecs)
+            c_shard = shd.tree_shardings(acaches, c_axes, mesh, rules)
+            tok_shard = shd.named_sharding((shape.global_batch, 1), ("batch", None), mesh, rules)
+            out_tok = shd.named_sharding((shape.global_batch,), ("batch",), mesh, rules)
+            fn = jax.jit(
+                decode,
+                in_shardings=(p_shard, c_shard, tok_shard, _replicated(mesh), _replicated(mesh)),
+                out_shardings=(out_tok, c_shard),
+                donate_argnums=(1,),
+            )
+            lowered = fn.lower(aparams, acaches, ins["token"], ins["pos"], ins["seed"])
+    t_lower = time.time() - t0
+    attn_mod.CHUNKED_THRESHOLD = old_thresh
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "devices": int(np.prod(mesh.devices.shape)),
+        "params": param_count(specs),
+        "lower_s": round(t_lower, 1),
+    }
+    if not compile_:
+        result["collectives"] = collective_bytes(lowered.as_text())
+        return result
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    result["compile_s"] = round(time.time() - t0, 1)
+
+    # memory analysis: proves the cell fits
+    try:
+        ma = compiled.memory_analysis()
+        result["memory"] = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        result["memory"] = {"error": str(e)}
+
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        result["cost"] = {
+            "flops": float(ca.get("flops", -1)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1)),
+        }
+    except Exception as e:
+        result["cost"] = {"error": str(e)}
+
+    result["collectives"] = collective_bytes(compiled.as_text())
+
+    # scan-aware correction: XLA counts a scan body once (see costing.py);
+    # compile one isolated layer body per stack and extrapolate.
+    from repro.launch import costing
+
+    try:
+        if cfg.encoder_layers > 0:
+            stacks = ["encdec_decoder"] if shape.kind == "decode" else ["encoder", "encdec_decoder"]
+        else:
+            stacks = ["decoder"]
+        with mesh:
+            bodies = {
+                st: costing.body_cost(cfg, shape, mesh, rules, shape.kind, st)
+                for st in stacks
+            }
+        result["body_costs"] = bodies
+        result["corrected"] = costing.corrected_totals(result, cfg, bodies)
+    except Exception as e:
+        result["body_costs"] = {"error": f"{type(e).__name__}: {e}"}
+    return result
+
+
+# ---------------------------------------------------------------------------
+# collective-byte accounting (cost_analysis has no collective term)
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|collective-broadcast)"
+    r"(?:-start|-done)?\(",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-shape bytes of every collective op in the (per-device)
+    optimized HLO.  '-done' ops are skipped so async pairs count once."""
+    out: Dict[str, float] = {}
+    count: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m or "-done(" in line:
+            continue
+        shape_txt, op = m.group(1), m.group(2)
+        b = _shape_bytes(shape_txt)
+        out[op] = out.get(op, 0) + b
+        count[op] = count.get(op, 0) + 1
+    out["total_bytes"] = sum(v for k, v in out.items() if k != "total_bytes")
+    out["op_counts"] = count
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES_BY_NAME))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true", help="run every assigned cell")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--moe-dispatch", choices=["einsum", "gather"], default=None)
+    ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
+    ap.add_argument("--act-seq-shard", action="store_true",
+                    help="sequence-shard saved activations over 'model'")
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="replicate params over data axes (decode regime)")
+    ap.add_argument("--pad-vocab", type=int, default=0,
+                    help="pad embedding tables to this multiple (Megatron)")
+    ap.add_argument("--sampler", default=None,
+                    help="override decode sampler method")
+    ap.add_argument("--q-chunk", type=int, default=None,
+                    help="chunked-attention threshold (2048 chunks 4k train)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch, shape in cells:
+        for multi in meshes:
+            mesh_tag = "multi" if multi else "single"
+            name = f"{arch}__{shape}__{mesh_tag}{args.tag}"
+            path = os.path.join(args.out, name + ".json")
+            if os.path.exists(path):
+                print(f"[skip] {name}")
+                continue
+            print(f"[run ] {name}", flush=True)
+            try:
+                res = lower_cell(
+                    arch, shape, multi_pod=multi,
+                    compile_=not args.no_compile,
+                    moe_dispatch=args.moe_dispatch,
+                    remat=args.remat,
+                    act_seq_shard=args.act_seq_shard,
+                    no_fsdp=args.no_fsdp,
+                    pad_vocab=args.pad_vocab,
+                    sampler=args.sampler,
+                    chunked_threshold=args.q_chunk,
+                )
+                res["status"] = "ok"
+            except Exception as e:
+                res = {
+                    "arch": arch, "shape": shape, "mesh": mesh_tag,
+                    "status": "fail", "error": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc()[-2000:],
+                }
+                failures += 1
+                print(f"[FAIL] {name}: {e}", flush=True)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            if res.get("status") == "ok":
+                mem = res.get("memory", {})
+                print(
+                    f"[ ok ] {name}: lower {res.get('lower_s')}s "
+                    f"compile {res.get('compile_s', '-')}s "
+                    f"flops {res.get('cost', {}).get('flops', -1):.3g} "
+                    f"coll {res.get('collectives', {}).get('total_bytes', 0):.3g}B",
+                    flush=True,
+                )
+    print(f"done; failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

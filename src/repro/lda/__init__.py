@@ -1,0 +1,23 @@
+"""Latent Dirichlet Allocation — the paper's application, end to end.
+
+Uncollapsed Gibbs sampler (paper §2): alternates drawing the latent topic
+``z[m,i]`` for every word position (THE step the butterfly technique
+accelerates) with Dirichlet updates of the document-topic matrix ``theta``
+and the word-topic matrix ``phi``.
+"""
+
+from repro.lda.corpus import Corpus, paper_corpus_stats, synthesize_corpus
+from repro.lda.gibbs import LDAState, gibbs_step, init_state, log_likelihood, perplexity
+from repro.lda.metrics import topic_recovery_score
+
+__all__ = [
+    "Corpus",
+    "paper_corpus_stats",
+    "synthesize_corpus",
+    "LDAState",
+    "gibbs_step",
+    "init_state",
+    "log_likelihood",
+    "perplexity",
+    "topic_recovery_score",
+]

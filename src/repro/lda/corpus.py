@@ -1,0 +1,116 @@
+"""Synthetic corpus generation + bucketing (the LDA data pipeline).
+
+The paper's evaluation corpus (Wikipedia-derived): M=43556 documents,
+V=37286 vocabulary, total words ~3.07M (avg doc ~70.5, max 307).  We
+synthesize corpora with planted topic structure at any scale, defaulting
+to proportionally scaled-down stats for CPU runs; benchmarks can ask for
+the full paper scale.
+
+TPU adaptation note (DESIGN.md §2): the paper handles ragged documents with
+a per-thread ``i_master`` loop; here raggedness is handled by rectangular
+padding + masks (documents additionally *bucketed* by length so padding
+waste stays under ~25%), the standard XLA idiom.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+PAPER_STATS = dict(M=43556, V=37286, total_words=3072662, max_len=307)
+
+
+def paper_corpus_stats() -> dict:
+    return dict(PAPER_STATS)
+
+
+@dataclasses.dataclass
+class Corpus:
+    """Rectangular view of a ragged corpus."""
+
+    docs: np.ndarray      # (M, maxN) int32 word ids (0-padded)
+    lengths: np.ndarray   # (M,) int32
+    mask: np.ndarray      # (M, maxN) bool
+    vocab_size: int
+    true_phi: np.ndarray | None = None    # (V, K) planted word-topic dists
+    true_theta: np.ndarray | None = None  # (M, K) planted doc-topic dists
+
+    @property
+    def num_docs(self) -> int:
+        return self.docs.shape[0]
+
+    @property
+    def total_words(self) -> int:
+        return int(self.lengths.sum())
+
+    def buckets(self, edges: Tuple[int, ...] = (32, 64, 128, 307)) -> List["Corpus"]:
+        """Split into length buckets, each trimmed to its own max length —
+        keeps the (M, maxN, K) z-draw weight tensor dense."""
+        out = []
+        lo = 0
+        for hi in edges:
+            sel = (self.lengths > lo) & (self.lengths <= hi)
+            if sel.any():
+                ls = self.lengths[sel]
+                width = int(ls.max())
+                out.append(
+                    Corpus(
+                        docs=self.docs[sel][:, :width],
+                        lengths=ls,
+                        mask=self.mask[sel][:, :width],
+                        vocab_size=self.vocab_size,
+                    )
+                )
+            lo = hi
+        return out
+
+
+def synthesize_corpus(
+    seed: int,
+    M: int = 512,
+    V: int = 1024,
+    K: int = 16,
+    avg_len: float = 70.5,
+    max_len: int = 307,
+    topic_concentration: float = 0.08,
+    doc_concentration: float = 0.25,
+) -> Corpus:
+    """Generate a corpus with planted topics (for recovery tests).
+
+    ``topic_concentration`` < 1 makes topics concentrated on few words —
+    recoverable structure; doc lengths follow the paper's mean/max profile.
+    """
+    rng = np.random.default_rng(seed)
+    true_phi = rng.dirichlet(np.full(V, topic_concentration), size=K).T  # (V, K)
+    true_theta = rng.dirichlet(np.full(K, doc_concentration), size=M)    # (M, K)
+    lengths = np.clip(rng.poisson(avg_len, size=M), 1, max_len).astype(np.int32)
+    maxN = int(lengths.max())
+    docs = np.zeros((M, maxN), np.int32)
+    mask = np.zeros((M, maxN), bool)
+    for m in range(M):
+        n = lengths[m]
+        topics = rng.choice(K, size=n, p=true_theta[m])
+        # vectorized word draw per topic group
+        words = np.empty(n, np.int32)
+        for k in np.unique(topics):
+            sel = topics == k
+            words[sel] = rng.choice(V, size=sel.sum(), p=true_phi[:, k])
+        docs[m, :n] = words
+        mask[m, :n] = True
+    return Corpus(
+        docs=docs,
+        lengths=lengths,
+        mask=mask,
+        vocab_size=V,
+        true_phi=true_phi,
+        true_theta=true_theta,
+    )
+
+
+def scaled_paper_corpus(seed: int, scale: float = 0.01, K: int = 64) -> Corpus:
+    """The paper's Wikipedia stats, scaled by ``scale`` for CPU benchmarks."""
+    M = max(8, int(PAPER_STATS["M"] * scale))
+    V = max(64, int(PAPER_STATS["V"] * scale))
+    return synthesize_corpus(seed, M=M, V=V, K=K, avg_len=70.5, max_len=PAPER_STATS["max_len"])

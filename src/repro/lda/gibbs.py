@@ -1,0 +1,154 @@
+"""Uncollapsed LDA Gibbs sampler (paper §2, Algorithm 1/4/7).
+
+One sweep =
+  1. DRAW Z  — for every word position (m, i): build the K relative
+     probabilities ``theta[m,k] * phi[w[m,i],k]`` and draw a topic.  This
+     is the paper's hot loop; the sampling strategy is pluggable
+     (``butterfly`` / ``fenwick`` / ``kernel`` / ``prefix`` / ``gumbel``).
+  2. UPDATE THETA — theta[m,:] ~ Dirichlet(alpha + doc-topic counts).
+  3. UPDATE PHI   — phi[:,k]  ~ Dirichlet(beta + word-topic counts).
+
+All three phases are jitted; the z-draw chunks over documents so the
+(chunk, maxN, K) weight tensor stays within memory at any corpus scale.
+For the multi-host layout, documents shard over the ``data`` mesh axis and
+the word-topic count matrix is combined with a psum (see
+``repro.launch.train --app lda``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sample_categorical
+from repro.lda.corpus import Corpus
+
+
+class LDAState(NamedTuple):
+    theta: jnp.ndarray  # (M, K) document-topic distributions (rows sum to 1)
+    phi: jnp.ndarray    # (V, K) word-topic distributions (columns sum to 1)
+    z: jnp.ndarray      # (M, maxN) int32 latent topic assignments
+    key: jax.Array
+    step: jnp.ndarray   # () int32
+
+
+def init_state(key: jax.Array, corpus: Corpus, K: int) -> LDAState:
+    M, maxN = corpus.docs.shape
+    V = corpus.vocab_size
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    theta = jax.random.dirichlet(k1, jnp.ones((K,)), shape=(M,))
+    phi = jax.random.dirichlet(k2, jnp.ones((V,)), shape=(K,)).T
+    z = jax.random.randint(k3, (M, maxN), 0, K)
+    return LDAState(theta=theta, phi=phi, z=z, key=k4, step=jnp.int32(0))
+
+
+@functools.partial(jax.jit, static_argnames=("method", "W"))
+def _draw_z_chunk(theta_c, phi, docs_c, key, method="fenwick", W=32):
+    """Draw z for a (C, N) chunk of documents. Returns (C, N) topics."""
+    C, N = docs_c.shape
+    K = theta_c.shape[-1]
+    if method == "lda_kernel":
+        # fused Pallas kernel: the (C*N, K) weights never materialize
+        from repro.kernels.lda_draw import lda_draw
+
+        u = jax.random.uniform(key, (C * N,), dtype=jnp.float32)
+        theta_flat = jnp.repeat(theta_c, N, axis=0)          # (C*N, K)
+        idx = lda_draw(theta_flat, phi, docs_c.reshape(-1), u, W=W)
+        return idx.reshape(C, N)
+    # weights[c, i, k] = theta[c, k] * phi[docs[c, i], k]   (paper Alg. 1 l.8)
+    weights = theta_c[:, None, :] * phi[docs_c]             # (C, N, K)
+    flat = weights.reshape(C * N, K)
+    u = jax.random.uniform(key, (C * N,), dtype=jnp.float32)
+    if method == "gumbel":
+        idx = sample_categorical(flat, key=key, method="gumbel")
+    else:
+        idx = sample_categorical(flat, u=u, method=method, W=W)
+    return idx.reshape(C, N)
+
+
+def draw_z(
+    state: LDAState,
+    docs: jnp.ndarray,
+    method: str = "fenwick",
+    W: int = 32,
+    chunk: int = 256,
+) -> jnp.ndarray:
+    """Chunked z-draw over all documents."""
+    M, maxN = docs.shape
+    keys = jax.random.split(state.key, (M + chunk - 1) // chunk + 1)
+    outs = []
+    for ci, start in enumerate(range(0, M, chunk)):
+        end = min(start + chunk, M)
+        outs.append(
+            _draw_z_chunk(
+                state.theta[start:end],
+                state.phi,
+                docs[start:end],
+                keys[ci],
+                method=method,
+                W=W,
+            )
+        )
+    return jnp.concatenate(outs, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("K", "V"))
+def _counts(z, docs, mask, K: int, V: int):
+    zoh = jax.nn.one_hot(z, K, dtype=jnp.float32) * mask[..., None]  # (M,N,K)
+    doc_topic = zoh.sum(axis=1)                                       # (M,K)
+    word_topic = jnp.zeros((V, K), jnp.float32).at[docs.reshape(-1)].add(
+        zoh.reshape(-1, K)
+    )
+    return doc_topic, word_topic
+
+
+@jax.jit
+def _update_theta(key, doc_topic, alpha):
+    g = jax.random.gamma(key, alpha + doc_topic)          # (M, K)
+    return g / g.sum(axis=-1, keepdims=True)
+
+
+@jax.jit
+def _update_phi(key, word_topic, beta):
+    g = jax.random.gamma(key, beta + word_topic)          # (V, K)
+    return g / g.sum(axis=0, keepdims=True)
+
+
+def gibbs_step(
+    state: LDAState,
+    corpus: Corpus,
+    alpha: float = 0.1,
+    beta: float = 0.05,
+    method: str = "fenwick",
+    W: int = 32,
+    chunk: int = 256,
+) -> LDAState:
+    """One full uncollapsed Gibbs sweep."""
+    docs = jnp.asarray(corpus.docs)
+    mask = jnp.asarray(corpus.mask)
+    K = state.theta.shape[-1]
+    V = state.phi.shape[0]
+    z = draw_z(state, docs, method=method, W=W, chunk=chunk)
+    doc_topic, word_topic = _counts(z, docs, mask, K, V)
+    k_theta, k_phi, k_next = jax.random.split(state.key, 3)
+    theta = _update_theta(k_theta, doc_topic, alpha)
+    phi = _update_phi(k_phi, word_topic, beta)
+    return LDAState(theta=theta, phi=phi, z=z, key=k_next, step=state.step + 1)
+
+
+@jax.jit
+def log_likelihood(theta, phi, docs, mask) -> jnp.ndarray:
+    """Held-in predictive log likelihood sum_{m,i} log sum_k theta*phi."""
+    p = jnp.einsum("mk,mnk->mn", theta, phi[docs])
+    ll = jnp.where(mask, jnp.log(jnp.maximum(p, 1e-30)), 0.0)
+    return ll.sum()
+
+
+def perplexity(state: LDAState, corpus: Corpus) -> float:
+    ll = log_likelihood(
+        state.theta, state.phi, jnp.asarray(corpus.docs), jnp.asarray(corpus.mask)
+    )
+    return float(jnp.exp(-ll / corpus.total_words))

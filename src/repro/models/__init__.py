@@ -1,0 +1,17 @@
+"""LM model stack: params specs, layers, attention variants, SSM, MoE,
+decoder-only + encoder-decoder backbones, family dispatch."""
+
+from repro.models.model import Model, build_model
+from repro.models.params import (
+    ParamSpec,
+    abstract_params,
+    init_params,
+    logical_axes,
+    param_bytes,
+    param_count,
+)
+
+__all__ = [
+    "Model", "build_model", "ParamSpec", "abstract_params", "init_params",
+    "logical_axes", "param_bytes", "param_count",
+]

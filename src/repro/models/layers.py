@@ -1,0 +1,124 @@
+"""Shared neural layers: norms, RoPE, MLPs, embeddings.
+
+All layers are pure functions over ParamSpec-declared params; compute is
+bf16-friendly (norms and softmax accumulate in fp32)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int) -> Dict[str, ParamSpec]:
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def head_rmsnorm_spec(head_dim: int) -> Dict[str, ParamSpec]:
+    """qk-norm (Qwen3): per-head RMSNorm over head_dim."""
+    return {"scale": ParamSpec((head_dim,), ("head",), init="ones")}
+
+
+def head_rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D) or (B, S, D); positions: (S,) shared across batch."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)               # (D/2,)
+    angles = positions[:, None].astype(jnp.float32) * freqs  # (S, D/2)
+    if x.ndim == 4:                                          # add heads axis
+        angles = angles[:, None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated)
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(d_model: int, d_ff: int) -> Dict[str, ParamSpec]:
+    return {
+        "w_gate": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def mlp(params, x, act: str = "silu"):
+    g = _act(act)(jnp.einsum("...d,df->...f", x, params["w_gate"]))
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    return jnp.einsum("...f,fd->...d", g * u, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_spec(vocab: int, d_model: int) -> Dict[str, ParamSpec]:
+    return {"table": ParamSpec((vocab, d_model), ("vocab", "embed"), scale=1.0)}
+
+
+def embed(params, tokens, scale: bool = False):
+    x = params["table"][tokens]
+    if scale:
+        x = x * jnp.sqrt(jnp.float32(params["table"].shape[-1])).astype(x.dtype)
+    return x
+
+
+def unembed_spec(vocab: int, d_model: int) -> Dict[str, ParamSpec]:
+    return {"table": ParamSpec((d_model, vocab), ("embed", "vocab"))}
+
+
+def unembed(params, x, tied_table=None, softcap: float = 0.0):
+    """Project to vocab logits (kept in compute dtype; consumers upcast —
+    a (B,S,V) fp32 logits tensor would dominate train-step memory at
+    V=256k).  ``tied_table`` (V, D) overrides."""
+    if tied_table is not None:
+        logits = jnp.einsum("...d,vd->...v", x, tied_table)
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, params["table"])
+    if softcap > 0:
+        logits = (jnp.tanh(logits.astype(jnp.float32) / softcap) * softcap).astype(logits.dtype)
+    return logits
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x

@@ -1,0 +1,218 @@
+"""Mamba-2 SSD (state-space duality) blocks — chunked training form +
+O(1)-state recurrent decode step.
+
+Chunked SSD (Dao & Gu 2024): the sequence is split into chunks of Q;
+within a chunk the dual quadratic (attention-like) form runs on the MXU,
+states are carried across chunks by a tiny scan.  Decode keeps a
+(H, P, N) state and a (width-1, channels) conv tail per layer — this is
+why mamba2/hymba are the only assigned archs that run the 500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import rmsnorm
+from repro.models.params import ParamSpec
+
+
+def ssm_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.num_heads * s.head_dim
+    gn = s.n_groups * s.state_dim
+    return {
+        "wz": ParamSpec((d, d_inner), ("embed", "mlp")),
+        "wx": ParamSpec((d, d_inner), ("embed", "mlp")),
+        "wb": ParamSpec((d, gn), ("embed", None)),
+        "wc": ParamSpec((d, gn), ("embed", None)),
+        "wdt": ParamSpec((d, s.num_heads), ("embed", "ssm_heads")),
+        "conv_x": ParamSpec((s.conv_width, d_inner), (None, "mlp"), scale=0.5),
+        "conv_b": ParamSpec((s.conv_width, gn), (None, None), scale=0.5),
+        "conv_c": ParamSpec((s.conv_width, gn), (None, None), scale=0.5),
+        "a_log": ParamSpec((s.num_heads,), ("ssm_heads",), init="zeros"),
+        "d_skip": ParamSpec((s.num_heads,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((s.num_heads,), ("ssm_heads",), init="zeros"),
+        "out_norm": {"scale": ParamSpec((d_inner,), ("mlp",), init="ones")},
+        "wout": ParamSpec((d_inner, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, state: Optional[jnp.ndarray]):
+    """Depthwise causal conv.  x (B,S,C), w (width,C).
+    state (B,width-1,C) or None (zero history).  Returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xs = jnp.concatenate([state, x], axis=1)  # (B, S+width-1, C)
+    y = sum(xs[:, i : i + x.shape[1], :] * w[i] for i in range(width))
+    new_state = xs[:, -(width - 1) :, :]
+    return jax.nn.silu(y), new_state
+
+
+def _project(params, x, cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    z = jnp.einsum("bsd,de->bse", x, params["wz"])
+    xin = jnp.einsum("bsd,de->bse", x, params["wx"])
+    b = jnp.einsum("bsd,de->bse", x, params["wb"])
+    c = jnp.einsum("bsd,de->bse", x, params["wc"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["wdt"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    return z, xin, b, c, dt
+
+
+def _heads(x, H, P):
+    return x.reshape(x.shape[0], x.shape[1], H, P)
+
+
+def ssd_chunked(xh, bh, ch, dt, a_log, chunk: int):
+    """Chunked SSD scan.
+
+    xh (B,S,H,P) dt-weighted inputs happen inside; bh,ch (B,S,H,N);
+    dt (B,S,H) fp32; a_log (H,).  Returns y (B,S,H,P) and final state
+    (B,H,P,N).
+    """
+    B, S, H, P = xh.shape
+    N = bh.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    A = -jnp.exp(a_log.astype(jnp.float32))                  # (H,) negative
+    loga = dt * A                                            # (B,S,H)
+    lg = loga.reshape(B, nc, Q, H)
+    cum = jnp.cumsum(lg, axis=2)                             # (B,nc,Q,H)
+    cum_last = cum[:, :, -1, :]                              # (B,nc,H)
+    x_c = (xh * dt[..., None].astype(xh.dtype)).reshape(B, nc, Q, H, P)
+    b_c = bh.reshape(B, nc, Q, H, N)
+    c_c = ch.reshape(B, nc, Q, H, N)
+
+    # intra-chunk (dual quadratic form)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,nc,Q,Q,H) t,s
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcqhn,bcshn->bcqsh", c_c, b_c).astype(jnp.float32)
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", cb * decay, x_c.astype(jnp.float32))
+
+    # chunk states: S_c = sum_s exp(cum_last - cum_s) * x_s B_s^T
+    decay_to_end = jnp.exp(cum_last[:, :, None, :] - cum)    # (B,nc,Q,H)
+    s_c = jnp.einsum(
+        "bcshn,bcshp->bchpn",
+        (b_c.astype(jnp.float32) * decay_to_end[..., None]),
+        x_c.astype(jnp.float32),
+    )
+
+    # carry scan across chunks
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    s_cs = s_c.transpose(1, 0, 2, 3, 4)                      # (nc,B,H,P,N)
+    clasts = cum_last.transpose(1, 0, 2)[..., None, None]    # (nc,B,H,1,1)
+
+    def step2(h, inp):
+        s_chunk, clast = inp
+        h_prev = h
+        h = h * jnp.exp(clast) + s_chunk
+        return h, h_prev
+
+    h_final, h_prevs = jax.lax.scan(step2, h0, (s_cs, clasts))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)               # (B,nc,H,P,N)
+
+    # inter-chunk: y_t += (C_t * exp(cum_t)) . h_prev
+    y_inter = jnp.einsum(
+        "bcqhn,bchpn->bcqhp",
+        c_c.astype(jnp.float32) * jnp.exp(cum)[..., None],
+        h_prevs,
+    )
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y, h_final
+
+
+def ssm_block(
+    params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Full-sequence SSD (train/prefill).  Returns (y, cache_out)."""
+    s: SSMConfig = cfg.ssm
+    H, P, N, G = s.num_heads, s.head_dim, s.state_dim, s.n_groups
+    B, S0, _ = x.shape
+    # front-pad to a chunk multiple: zero inputs leave the state untouched
+    # (h = 0 decays to 0), so states and the final decode cache stay exact.
+    pad = (-S0) % min(s.chunk, max(S0, 1))
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
+    B, S, _ = x.shape
+    z, xin, b, c, dt = _project(params, x, cfg)
+    xin, conv_x_state = _causal_conv(xin, params["conv_x"], None)
+    b, conv_b_state = _causal_conv(b, params["conv_b"], None)
+    c, conv_c_state = _causal_conv(c, params["conv_c"], None)
+    xh = _heads(xin, H, P)
+    rep = H // G
+    bh = jnp.repeat(_heads(b, G, N), rep, axis=2)
+    ch = jnp.repeat(_heads(c, G, N), rep, axis=2)
+    y, h_final = ssd_chunked(xh, bh, ch, dt, params["a_log"], s.chunk)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, H * P).astype(x.dtype)
+    y = rmsnorm(params["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["wout"])
+    if pad:
+        out = out[:, pad:]
+    cache_out = {
+        "h": h_final.astype(jnp.float32),
+        "conv_x": conv_x_state,
+        "conv_b": conv_b_state,
+        "conv_c": conv_c_state,
+    }
+    return out, cache_out
+
+
+def ssm_decode_step(
+    params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray], cfg: ModelConfig
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token recurrent step.  x (B,1,D)."""
+    s: SSMConfig = cfg.ssm
+    H, P, N, G = s.num_heads, s.head_dim, s.state_dim, s.n_groups
+    B = x.shape[0]
+    z, xin, b, c, dt = _project(params, x, cfg)
+    xin, conv_x_state = _causal_conv(xin, params["conv_x"], cache["conv_x"])
+    b, conv_b_state = _causal_conv(b, params["conv_b"], cache["conv_b"])
+    c, conv_c_state = _causal_conv(c, params["conv_c"], cache["conv_c"])
+    xh = _heads(xin, H, P)[:, 0]                      # (B,H,P)
+    rep = H // G
+    bh = jnp.repeat(_heads(b, G, N), rep, axis=2)[:, 0]   # (B,H,N)
+    ch = jnp.repeat(_heads(c, G, N), rep, axis=2)[:, 0]
+    dt0 = dt[:, 0]                                    # (B,H)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt0 * A)                             # (B,H)
+    h = cache["h"].astype(jnp.float32) * da[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", (xh.astype(jnp.float32) * dt0[..., None]), bh.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", ch.astype(jnp.float32), h)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, 1, H * P).astype(x.dtype)
+    y = rmsnorm(params["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["wout"])
+    new_cache = {
+        "h": h.astype(cache["h"].dtype),
+        "conv_x": conv_x_state,
+        "conv_b": conv_b_state,
+        "conv_c": conv_c_state,
+    }
+    return out, new_cache
+
+
+def ssm_cache_spec(cfg: ModelConfig, batch: int) -> Dict[str, ParamSpec]:
+    s: SSMConfig = cfg.ssm
+    d_inner = s.num_heads * s.head_dim
+    gn = s.n_groups * s.state_dim
+    w = s.conv_width - 1
+    return {
+        "h": ParamSpec((batch, s.num_heads, s.head_dim, s.state_dim),
+                       ("batch", "ssm_heads", None, None), init="zeros"),
+        "conv_x": ParamSpec((batch, w, d_inner), ("batch", None, "mlp"), init="zeros"),
+        "conv_b": ParamSpec((batch, w, gn), ("batch", None, None), init="zeros"),
+        "conv_c": ParamSpec((batch, w, gn), ("batch", None, None), init="zeros"),
+    }

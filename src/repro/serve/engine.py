@@ -1,0 +1,140 @@
+"""Serving engine: batched prefill + decode with the butterfly sampler.
+
+Token sampling from a vocab-sized categorical per sequence is *exactly* the
+paper's setting (K = vocab, one distribution per batch row, each table used
+once) — the decode step's sampler is the paper's technique as a first-class
+serving feature (``ModelConfig.sampler_method``: fenwick | butterfly |
+kernel | prefix | gumbel).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import sample_from_logits
+from repro.models.model import Model
+from repro.models.params import init_params
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, max_new)
+    steps: int
+    prefill_len: int
+
+
+def make_decode_step(model: Model, temperature: float = 1.0):
+    """Jitted single decode step: (params, caches, token, pos, key) ->
+    (next_token, logits, caches)."""
+    cfg = model.cfg
+
+    @jax.jit
+    def step(params, caches, token, pos, key):
+        logits, caches = model.decode(params, caches, token, pos)
+        nxt = sample_from_logits(
+            logits, key, temperature=temperature,
+            method=cfg.sampler_method, W=cfg.sampler_W,
+        )
+        return nxt[:, None].astype(jnp.int32), logits, caches
+
+    return step
+
+
+def _pad_caches_to(caches, target_len: int):
+    """Grow attention caches (L, B, S, ...) along the seq axis to target."""
+    def pad(path, leaf):
+        names = {getattr(k, "key", None) for k in path}
+        if names & {"k", "v", "c_kv", "k_pe", "self_k", "self_v"}:
+            cur = leaf.shape[2]
+            if cur < target_len:
+                pads = [(0, 0), (0, 0), (0, target_len - cur)] + [(0, 0)] * (leaf.ndim - 3)
+                return jnp.pad(leaf, pads)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(pad, caches)
+
+
+def generate(
+    model: Model,
+    params,
+    batch: Dict,
+    max_new_tokens: int = 16,
+    temperature: float = 1.0,
+    key: Optional[jax.Array] = None,
+    eos_id: Optional[int] = None,
+) -> GenerationResult:
+    """Prefill the prompt batch, then decode ``max_new_tokens`` greedily or
+    by sampling.  Python loop around a jitted step (engine-style)."""
+    cfg = model.cfg
+    key = key if key is not None else jax.random.PRNGKey(0)
+    last_logits, caches = model.prefill(params, batch)
+    toks = batch["tgt_tokens"] if "tgt_tokens" in batch else batch["tokens"]
+    B, S = toks.shape
+    prefix = cfg.meta_tokens + (
+        batch["frontend_embeds"].shape[1] if "frontend_embeds" in batch else 0
+    )
+    prefill_len = S + prefix
+    caches = _pad_caches_to(caches, prefill_len + max_new_tokens)
+
+    step_fn = make_decode_step(model, temperature)
+    k0, key = jax.random.split(key)
+    first = sample_from_logits(
+        last_logits, k0, temperature=temperature,
+        method=cfg.sampler_method, W=cfg.sampler_W,
+    )[:, None].astype(jnp.int32)
+
+    out = [np.asarray(first)]
+    token = first
+    done = np.zeros((B,), bool)
+    for t in range(max_new_tokens - 1):
+        key, sub = jax.random.split(key)
+        token, _, caches = step_fn(
+            params, caches, token, jnp.int32(prefill_len + t), sub
+        )
+        arr = np.asarray(token)
+        if eos_id is not None:
+            done |= (arr[:, 0] == eos_id)
+            if done.all():
+                out.append(arr)
+                break
+        out.append(arr)
+    tokens = np.concatenate(out, axis=1)
+    return GenerationResult(tokens=tokens, steps=tokens.shape[1], prefill_len=prefill_len)
+
+
+def make_serve_step(model: Model, temperature: float = 1.0):
+    """The dry-run target: one fused decode+sample step as a pure function
+    (params, caches, token, pos, key) -> (next_token, caches)."""
+    cfg = model.cfg
+
+    def serve_step(params, caches, token, pos, key):
+        logits, caches = model.decode(params, caches, token, pos)
+        nxt = sample_from_logits(
+            logits, key, temperature=temperature,
+            method=cfg.sampler_method, W=cfg.sampler_W,
+        )
+        return nxt.astype(jnp.int32), caches
+
+    return serve_step
+
+
+def make_prefill_step(model: Model, temperature: float = 1.0):
+    """Dry-run prefill target: (params, batch, key) -> (first_token, caches)."""
+    cfg = model.cfg
+
+    def prefill_step(params, batch, key):
+        last_logits, caches = model.prefill(params, batch)
+        nxt = sample_from_logits(
+            last_logits, key, temperature=temperature,
+            method=cfg.sampler_method, W=cfg.sampler_W,
+        )
+        return nxt.astype(jnp.int32), caches
+
+    return prefill_step

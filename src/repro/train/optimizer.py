@@ -1,0 +1,242 @@
+"""Optimizers: AdamW (fp32 state), 8-bit AdamW (blockwise-quantized moments
+— the trick that fits arctic-480b's optimizer state on 256 chips), and
+Adafactor (factored second moment).
+
+All share one interface:
+    opt = make_optimizer(name, lr=..., **kw)
+    state = opt.init(params)            # or opt.init_abstract(param_specs)
+    params, state = opt.update(grads, params, state, step)
+
+States are pytrees of arrays (checkpointable, shardable with the same
+logical axes as their params).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QBLOCK = 256  # 8-bit moment quantization block size
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable                 # (grads, params, state, step) -> (params, state)
+    state_specs: Callable            # (param_specs) -> state spec tree (for dryrun)
+
+
+def _schedule(step, lr, warmup=2000, total=100_000, min_ratio=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return lr * warm * (min_ratio + (1 - min_ratio) * cos)
+
+
+# ---------------------------------------------------------------------------
+# 8-bit blockwise quantization of moments
+# ---------------------------------------------------------------------------
+
+
+def _q8(x: jnp.ndarray):
+    """Quantize to int8 with per-block absmax scales.  x flattened."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % QBLOCK
+    fp = jnp.pad(flat, (0, pad))
+    blocks = fp.reshape(-1, QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-20)).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dq8(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    return flat[: int(np.prod(shape))].reshape(shape)
+
+
+def _q8_sqrt(v: jnp.ndarray):
+    """Unsigned 8-bit quantization of the *square root* of a non-negative
+    tensor.  Storing sqrt(v) halves the dynamic range, so small second
+    moments don't collapse to zero (which would explode m/sqrt(v) updates —
+    the classic naive-8-bit-Adam failure)."""
+    flat = jnp.sqrt(jnp.maximum(v, 0.0)).reshape(-1)
+    pad = (-flat.size) % QBLOCK
+    fp = jnp.pad(flat, (0, pad))
+    blocks = fp.reshape(-1, QBLOCK)
+    scale = jnp.max(blocks, axis=1, keepdims=True) / 255.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-20)).astype(jnp.uint8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dq8_sqrt(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    return jnp.square(flat[: int(np.prod(shape))].reshape(shape))
+
+
+# ---------------------------------------------------------------------------
+# AdamW family
+# ---------------------------------------------------------------------------
+
+
+def make_adamw(
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    warmup: int = 2000,
+    total_steps: int = 100_000,
+    bits8: bool = False,
+) -> Optimizer:
+    def init_leaf(p):
+        if bits8:
+            mq, ms = _q8(jnp.zeros_like(p, jnp.float32))
+            vq, vs = _q8_sqrt(jnp.zeros_like(p, jnp.float32))
+            return {"m_q": mq, "m_s": ms, "v_q": vq, "v_s": vs}
+        return {"m": jnp.zeros_like(p, jnp.float32), "v": jnp.zeros_like(p, jnp.float32)}
+
+    def init(params):
+        return jax.tree.map(init_leaf, params)
+
+    def update(grads, params, state, step):
+        lr_t = _schedule(step, lr, warmup, total_steps)
+        bc1 = 1 - b1 ** (jnp.asarray(step, jnp.float32) + 1)
+        bc2 = 1 - b2 ** (jnp.asarray(step, jnp.float32) + 1)
+
+        def upd(g, p, s):
+            g = g.astype(jnp.float32)
+            if bits8:
+                m = _dq8(s["m_q"], s["m_s"], g.shape)
+                v = _dq8_sqrt(s["v_q"], s["v_s"], g.shape)
+            else:
+                m, v = s["m"], s["v"]
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            upd_ = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                upd_ = upd_ + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr_t * upd_).astype(p.dtype)
+            if bits8:
+                mq, ms = _q8(m)
+                vq, vs = _q8_sqrt(v)
+                return new_p, {"m_q": mq, "m_s": ms, "v_q": vq, "v_s": vs}
+            return new_p, {"m": m, "v": v}
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_p = jax.tree.leaves(params)
+        flat_s = tdef.flatten_up_to(state)
+        out = [upd(g, p, s) for g, p, s in zip(flat_g, flat_p, flat_s)]
+        new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_state = jax.tree.unflatten(tdef, [o[1] for o in out])
+        return new_params, new_state
+
+    def state_specs(param_specs):
+        from repro.models.params import ParamSpec, is_spec
+
+        def leaf(sp: "ParamSpec"):
+            n = int(np.prod(sp.shape))
+            nb = -(-n // QBLOCK)
+            if bits8:
+                return {
+                    "m_q": jax.ShapeDtypeStruct((nb, QBLOCK), jnp.int8),
+                    "m_s": jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+                    "v_q": jax.ShapeDtypeStruct((nb, QBLOCK), jnp.uint8),
+                    "v_s": jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+                }
+            return {
+                "m": jax.ShapeDtypeStruct(sp.shape, jnp.float32),
+                "v": jax.ShapeDtypeStruct(sp.shape, jnp.float32),
+            }
+
+        return jax.tree.map(leaf, param_specs, is_leaf=is_spec)
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+def make_adafactor(
+    lr: float = 1e-3,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    weight_decay: float = 0.0,
+    warmup: int = 2000,
+    total_steps: int = 100_000,
+) -> Optimizer:
+    """Factored second-moment (Shazeer & Stern 2018), no first moment."""
+
+    def init_leaf(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros_like(p, jnp.float32)}
+
+    def init(params):
+        return jax.tree.map(init_leaf, params)
+
+    def update(grads, params, state, step):
+        lr_t = _schedule(step, lr, warmup, total_steps)
+        t = jnp.asarray(step, jnp.float32) + 1
+        beta = 1 - t ** (-decay)
+
+        def upd(g, p, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (
+                    vr[..., None]
+                    / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)[..., None]
+                ) * vc[..., None, :]
+                upd_ = g / jnp.sqrt(jnp.maximum(denom, eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                upd_ = g / jnp.sqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            # update clipping (RMS <= 1)
+            rms = jnp.sqrt(jnp.mean(upd_**2))
+            upd_ = upd_ / jnp.maximum(1.0, rms)
+            if weight_decay and p.ndim >= 2:
+                upd_ = upd_ + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * upd_).astype(p.dtype), new_s
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_p = jax.tree.leaves(params)
+        flat_s = tdef.flatten_up_to(state)
+        out = [upd(g, p, s) for g, p, s in zip(flat_g, flat_p, flat_s)]
+        return (
+            jax.tree.unflatten(tdef, [o[0] for o in out]),
+            jax.tree.unflatten(tdef, [o[1] for o in out]),
+        )
+
+    def state_specs(param_specs):
+        from repro.models.params import is_spec
+
+        def leaf(sp):
+            if len(sp.shape) >= 2:
+                return {
+                    "vr": jax.ShapeDtypeStruct(sp.shape[:-1], jnp.float32),
+                    "vc": jax.ShapeDtypeStruct(sp.shape[:-2] + sp.shape[-1:], jnp.float32),
+                }
+            return {"v": jax.ShapeDtypeStruct(sp.shape, jnp.float32)}
+
+        return jax.tree.map(leaf, param_specs, is_leaf=is_spec)
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+def make_optimizer(name: str = "adamw", **kw) -> Optimizer:
+    if name == "adamw":
+        return make_adamw(**kw)
+    if name == "adamw8bit":
+        return make_adamw(bits8=True, **kw)
+    if name == "adafactor":
+        return make_adafactor(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")

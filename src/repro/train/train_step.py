@@ -1,0 +1,94 @@
+"""Train step: masked CE (+ z-loss + MoE aux), grad clipping, optimizer.
+
+The step is a pure function — pjit partitions it from the in/out shardings
+(see repro.dist.sharding / repro.launch).  Mixed precision: params bf16,
+activations bf16, losses/reductions fp32, optimizer state per-optimizer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.train.optimizer import Optimizer
+
+
+class TrainMetrics(NamedTuple):
+    loss: jnp.ndarray
+    ce: jnp.ndarray
+    aux: jnp.ndarray
+    grad_norm: jnp.ndarray
+    tokens: jnp.ndarray
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, mask: jnp.ndarray,
+                  z_loss: float = 1e-4) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Masked token CE with z-loss; logits any float dtype, math in fp32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (lse - gold) * mask
+    zl = z_loss * (lse**2) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (ce.sum() + zl.sum()) / denom, ce.sum() / denom
+
+
+def _batch_labels(model: Model, batch: Dict):
+    """Next-token labels + mask from the batch (decoder-only or encdec)."""
+    toks = batch["tgt_tokens"] if "tgt_tokens" in batch else batch["tokens"]
+    labels = toks[:, 1:]
+    mask = jnp.ones_like(labels, jnp.float32)
+    return labels, mask
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree))
+    )
+
+
+def make_train_step(
+    model: Model,
+    optimizer: Optimizer,
+    remat: str = "full",
+    grad_clip: float = 1.0,
+    moe_aux_weight: float = 0.01,
+    z_loss: float = 1e-4,
+) -> Callable:
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params, opt_state, TrainMetrics)."""
+
+    def loss_fn(params, batch):
+        logits, aux = model.apply(params, batch, remat=remat)
+        labels, mask = _batch_labels(model, batch)
+        loss, ce = cross_entropy(logits[:, :-1], labels, mask, z_loss)
+        total = loss + moe_aux_weight * aux
+        return total, (ce, aux, mask.sum())
+
+    def train_step(params, opt_state, batch, step):
+        (loss, (ce, aux, ntok)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads)
+        params, opt_state = optimizer.update(grads, params, opt_state, step)
+        return params, opt_state, TrainMetrics(
+            loss=loss, ce=ce, aux=aux, grad_norm=gnorm, tokens=ntok
+        )
+
+    return train_step
+
+
+def make_eval_step(model: Model, remat: str = "none") -> Callable:
+    def eval_step(params, batch):
+        logits, _ = model.apply(params, batch, remat=remat)
+        labels, mask = _batch_labels(model, batch)
+        _, ce = cross_entropy(logits[:, :-1], labels, mask, z_loss=0.0)
+        return ce
+
+    return eval_step

@@ -1,0 +1,74 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED config
+of each family runs one forward + one train step + one decode step on CPU,
+asserting output shapes and finiteness."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import TokenPipeline
+from repro.models import build_model, init_params
+from repro.models.params import init_params as init_tree
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import make_train_step
+
+SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=4, kind="train")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.specs, jnp.float32)
+    pipe = TokenPipeline(cfg, SHAPE, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+
+    logits, aux = model.apply(params, batch, remat="none")
+    toks = batch.get("tgt_tokens", batch.get("tokens"))
+    assert logits.shape == (*toks.shape, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), f"{arch}: NaN logits"
+
+    opt = make_optimizer("adamw", lr=1e-3, warmup=2, total_steps=10)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, opt, remat="none"))
+    params2, _, metrics = step_fn(params, opt_state, batch, jnp.int32(1))
+    assert np.isfinite(float(metrics.loss)), f"{arch}: NaN loss"
+    # params actually changed
+    moved = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert moved, f"{arch}: optimizer made no update"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.specs, jnp.float32)
+    B, max_len = 2, 16
+    caches = init_tree(jax.random.PRNGKey(1), model.cache_specs(B, max_len), jnp.float32)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, caches2 = model.decode(params, caches, tok, jnp.int32(5))
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), f"{arch}: NaN decode"
+    # cache structure is stable (scan/jit friendly across steps)
+    jax.tree.map(lambda a, b: None, caches, caches2)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_remat_matches(arch):
+    """remat='full' must not change the forward values."""
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.specs, jnp.float32)
+    pipe = TokenPipeline(cfg, SHAPE, seed=1)
+    batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+    l1, _ = model.apply(params, batch, remat="none")
+    l2, _ = model.apply(params, batch, remat="full")
+    np.testing.assert_allclose(
+        np.asarray(l1, np.float32), np.asarray(l2, np.float32), rtol=2e-5, atol=2e-5
+    )

@@ -1,0 +1,135 @@
+"""Search correctness: butterfly/fenwick/prefix vs the scalar linear-search
+oracle, including hypothesis property tests on exact-integer weights."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    draw_butterfly,
+    draw_fenwick,
+    draw_linear_np,
+    draw_prefix,
+    draw_two_level,
+    sample_categorical,
+)
+
+
+def _oracle(w, u):
+    return draw_linear_np(w, u)
+
+
+@pytest.mark.parametrize("W", [4, 8, 32])
+@pytest.mark.parametrize("K", [4, 19, 37, 64, 257])
+def test_exact_agreement_integer_weights(W, K):
+    rng = np.random.default_rng(W * 1000 + K)
+    B = 48
+    w = rng.integers(1, 1000, size=(B, K)).astype(np.float32)
+    u = rng.uniform(0, 1, size=(B,)).astype(np.float32)
+    expect = _oracle(w, u)
+    np.testing.assert_array_equal(np.array(draw_butterfly(jnp.array(w), jnp.array(u), W=W)), expect)
+    np.testing.assert_array_equal(np.array(draw_fenwick(jnp.array(w), jnp.array(u), W=W)), expect)
+    np.testing.assert_array_equal(np.array(draw_two_level(jnp.array(w), jnp.array(u), W=W)), expect)
+    np.testing.assert_array_equal(np.array(draw_prefix(jnp.array(w), jnp.array(u))), expect)
+
+
+def test_sparse_rows_and_zero_weights():
+    """Rows dominated by zeros (common for LDA topic tables) still select
+    only positive-weight entries."""
+    rng = np.random.default_rng(7)
+    B, K = 64, 96
+    w = np.zeros((B, K), np.float32)
+    for b in range(B):
+        hot = rng.choice(K, size=3, replace=False)
+        w[b, hot] = rng.integers(1, 10, size=3)
+    u = rng.uniform(0, 1, size=(B,)).astype(np.float32)
+    for fn in (draw_butterfly, draw_fenwick):
+        idx = np.array(fn(jnp.array(w), jnp.array(u), W=8))
+        assert (w[np.arange(B), idx] > 0).all()
+        np.testing.assert_array_equal(idx, _oracle(w, u))
+
+
+def test_u_extremes():
+    rng = np.random.default_rng(8)
+    w = rng.integers(1, 10, size=(4, 32)).astype(np.float32)
+    u0 = np.zeros(4, np.float32)
+    idx0 = np.array(draw_butterfly(jnp.array(w), jnp.array(u0), W=8))
+    np.testing.assert_array_equal(idx0, 0)  # u=0 -> first positive entry
+    u1 = np.full(4, np.nextafter(1.0, 0.0), np.float32)
+    idx1 = np.array(draw_butterfly(jnp.array(w), jnp.array(u1), W=8))
+    assert (idx1 == 31).all()
+
+
+def test_single_hot_category():
+    w = np.zeros((8, 64), np.float32)
+    hot = np.array([0, 5, 31, 32, 33, 62, 63, 17])
+    w[np.arange(8), hot] = 1.0
+    u = np.linspace(0.01, 0.99, 8).astype(np.float32)
+    for fn in (draw_butterfly, draw_fenwick):
+        np.testing.assert_array_equal(np.array(fn(jnp.array(w), jnp.array(u), W=8)), hot)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    data=st.data(),
+    W=st.sampled_from([4, 8, 16]),
+    K=st.integers(min_value=1, max_value=70),
+    B=st.integers(min_value=1, max_value=20),
+)
+def test_property_matches_searchsorted(data, W, K, B):
+    """Property: for any positive-integer weight matrix and any u grid, the
+    butterfly and fenwick draws equal searchsorted on exact prefix sums."""
+    w = np.array(
+        data.draw(
+            st.lists(
+                st.lists(st.integers(1, 2**16), min_size=K, max_size=K),
+                min_size=B,
+                max_size=B,
+            )
+        ),
+        dtype=np.float32,
+    )
+    u = np.array(
+        data.draw(st.lists(st.floats(0.0, 0.9999989867210388, width=32), min_size=B, max_size=B)),
+        dtype=np.float32,
+    )
+    expect = _oracle(w, u)
+    got_b = np.array(draw_butterfly(jnp.array(w), jnp.array(u), W=W))
+    got_f = np.array(draw_fenwick(jnp.array(w), jnp.array(u), W=W))
+    np.testing.assert_array_equal(got_b, expect)
+    np.testing.assert_array_equal(got_f, expect)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_reconstruction_invariant(seed):
+    """The key invariant (DESIGN.md §1): every inclusive prefix sum needed by
+    a binary search is reconstructible from the butterfly table.  We test the
+    stronger statement: drawing with u that isolates *every* index k returns
+    k exactly."""
+    rng = np.random.default_rng(seed)
+    W, K = 8, 24
+    w = rng.integers(1, 64, size=(W, K)).astype(np.float32)
+    p = np.cumsum(w, axis=1)
+    total = p[:, -1:]
+    for k in range(K):
+        # u chosen so stop lands in the middle of entry k's mass
+        stop = (p[:, k] - w[:, k] / 2.0)
+        u = (stop / total[:, 0]).astype(np.float32)
+        idx = np.array(draw_butterfly(jnp.array(w), jnp.array(u), W=W))
+        np.testing.assert_array_equal(idx, k)
+
+
+def test_api_dispatch():
+    rng = np.random.default_rng(11)
+    w = rng.uniform(0.1, 1.0, size=(16, 40)).astype(np.float32)
+    key = jax.random.PRNGKey(0)
+    for method in ("butterfly", "fenwick", "two_level", "prefix", "gumbel", "alias"):
+        idx = sample_categorical(jnp.array(w), key=key, method=method, W=8)
+        assert idx.shape == (16,)
+        assert ((np.array(idx) >= 0) & (np.array(idx) < 40)).all()
+    # 1-D convenience
+    idx = sample_categorical(jnp.array(w[0]), key=key, method="fenwick", W=8)
+    assert idx.shape == ()

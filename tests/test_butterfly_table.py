@@ -1,0 +1,118 @@
+"""Butterfly table structure tests — pins the layout to the paper's Fig. 1/2."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    build_butterfly_table,
+    build_fenwick_table,
+    butterfly_rounds,
+    closed_form_table,
+)
+
+
+def _seg(w_row, lo, hi):
+    return float(np.sum(w_row[lo : hi + 1]))
+
+
+class TestClosedForm:
+    @pytest.mark.parametrize("W", [2, 4, 8, 16, 32])
+    def test_rounds_match_closed_form(self, W):
+        rng = np.random.default_rng(W)
+        B, K = 2 * W, 3 * W
+        w = rng.integers(1, 50, size=(B, K)).astype(np.float32)
+        t = build_butterfly_table(jnp.array(w), W)
+        tc = closed_form_table(jnp.array(w), W)
+        np.testing.assert_allclose(np.array(t), np.array(tc), rtol=0, atol=0)
+
+    def test_figure2_example_w8(self):
+        """The paper's W=8 worked example, checked entry-by-entry.
+
+        After the three replacement sets, entry (i, j) of a block holds
+        u_v^w with m = i^(i+1), k = m>>1, u = (i&~m)+(j&m), v = j&~k,
+        w = v+k.  Spot-check the rows quoted in Fig. 2's rightmost matrix.
+        """
+        W = 8
+        rng = np.random.default_rng(0)
+        w = rng.integers(1, 9, size=(8, 8)).astype(np.float32)
+        blocks = jnp.array(w)[None, None, :, :]  # (G=1, nb=1, W, W)
+        t = np.array(butterfly_rounds(blocks, W))[0, 0]
+        # row 0: alternating docs 0,1 single products: (j&1)_j^j
+        for j in range(8):
+            assert t[0, j] == _seg(w[j & 1], j, j)
+        # row 3: j_0^3 for j<4, j_4^7 for j>=4  (Fig. 2, "after third set")
+        for j in range(8):
+            lo = 0 if j < 4 else 4
+            assert t[3, j] == pytest.approx(_seg(w[j], lo, lo + 3))
+        # row 7: full block sums per doc j
+        for j in range(8):
+            assert t[7, j] == pytest.approx(_seg(w[j], 0, 7))
+        # row 5: 4_0^1 5_0^1 6_2^3 7_2^3 4_4^5 5_4^5 6_6^7 7_6^7
+        expect = [(4, 0, 1), (5, 0, 1), (6, 2, 3), (7, 2, 3),
+                  (4, 4, 5), (5, 4, 5), (6, 6, 7), (7, 6, 7)]
+        for j, (u, lo, hi) in enumerate(expect):
+            assert t[5, j] == pytest.approx(_seg(w[u], lo, hi)), (j, u, lo, hi)
+
+    def test_intermediate_first_set(self):
+        """Fig. 2 'after first set': R[2k,2k+1;2l,2l+1] replacements only."""
+        W = 8
+        rng = np.random.default_rng(1)
+        w = rng.integers(1, 9, size=(8, 8)).astype(np.float32)
+        blocks = jnp.array(w)[None, None, :, :]
+        # run only round b=0 by calling butterfly_rounds with W=2 semantics
+        # manually: emulate one round
+        m = np.array(blocks[0, 0]).copy()
+        for d in range(0, 8, 2):
+            for c in range(0, 8, 2):
+                a, b_ = m[d, c], m[d, c + 1]
+                cc, dd = m[d + 1, c], m[d + 1, c + 1]
+                m[d, c], m[d, c + 1] = a, dd
+                m[d + 1, c], m[d + 1, c + 1] = a + b_, cc + dd
+        # row1 after first set: 0_0^1 1_0^1 0_2^3 1_2^3 ...
+        for j in range(8):
+            u = j & 1
+            v = (j // 2) * 2
+            assert m[1, j] == pytest.approx(_seg(w[u], v, v + 1))
+
+
+class TestRunningSums:
+    def test_last_rows_are_running_prefix(self):
+        W = 8
+        rng = np.random.default_rng(2)
+        w = rng.integers(1, 50, size=(8, 40)).astype(np.float32)  # 5 blocks
+        t = np.array(build_butterfly_table(jnp.array(w), W))
+        block_sums = w.reshape(8, 5, 8).sum(axis=-1)  # (doc, block)
+        running = np.cumsum(block_sums, axis=1)
+        # row W-1 of block c, column j = running sum of doc j through block c
+        for c in range(5):
+            np.testing.assert_allclose(t[0, c, W - 1, :], running[:, c], rtol=1e-6)
+
+    def test_fenwick_layout(self):
+        """Position d with ntz(d+1)=l holds S[d-2^l+1 .. d] (own row)."""
+        W = 16
+        rng = np.random.default_rng(3)
+        w = rng.integers(1, 50, size=(4, 64)).astype(np.float32)
+        t = np.array(build_fenwick_table(jnp.array(w), W))
+        for b in range(4):
+            for c in range(64 // W):
+                base = c * W
+                for d in range(W - 1):
+                    ell = ((d + 1) & -(d + 1)).bit_length() - 1
+                    lo = base + d - (1 << ell) + 1
+                    assert t[b, base + d] == pytest.approx(
+                        w[b, lo : base + d + 1].sum()
+                    ), (b, c, d)
+                # position W-1: running cross-block prefix
+                assert t[b, base + W - 1] == pytest.approx(w[b, : base + W].sum())
+
+
+class TestWorkCounts:
+    def test_fenwick_is_in_place_blockwise(self):
+        """Table has the same shape/memory as the input — no (B,K) prefix
+        array plus separate table; the paper's space claim."""
+        w = jnp.ones((8, 64), jnp.float32)
+        t = build_fenwick_table(w, 16)
+        assert t.shape == w.shape
+        tb = build_butterfly_table(w, 8)
+        assert tb.size == w.size

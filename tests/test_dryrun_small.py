@@ -1,0 +1,95 @@
+"""Dry-run machinery test at a small host-device count (subprocess so the
+XLA_FLAGS device-count override can't leak into other tests)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.dist import sharding as shd
+    from repro.models import abstract_params, build_model, logical_axes
+    from repro.train.optimizer import make_optimizer
+    from repro.train.train_step import make_train_step
+    from repro.launch.dryrun import collective_bytes, input_specs
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = get_config("llama3-8b", smoke=True)
+    shape = ShapeConfig("t", seq_len=64, global_batch=8, kind="train")
+    model = build_model(cfg)
+    ap = abstract_params(model.specs, jnp.bfloat16)
+    ax = logical_axes(model.specs)
+    ps = shd.tree_shardings(ap, ax, mesh)
+    opt = make_optimizer("adamw")
+    os_specs = opt.state_specs(model.specs)
+    o_ax = shd.optimizer_state_axes("adamw", ax)
+    o_sh = shd.tree_shardings(os_specs, o_ax, mesh)
+    step = make_train_step(model, opt, remat="full")
+    ins = input_specs(cfg, shape)
+    b_sh = jax.tree.map(
+        lambda s: shd.named_sharding(s.shape, ("batch", "seq"), mesh), ins["batch"]
+    )
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    with mesh:
+        lowered = jax.jit(
+            step, in_shardings=(ps, o_sh, b_sh, rep), out_shardings=(ps, o_sh, rep)
+        ).lower(ap, os_specs, ins["batch"], ins["step"])
+        compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    coll = collective_bytes(compiled.as_text())
+    print(json.dumps({
+        "flops": float(ca.get("flops", -1)),
+        "temp": int(ma.temp_size_in_bytes),
+        "coll_total": coll["total_bytes"],
+        "n_collective_kinds": len(coll["op_counts"]),
+    }))
+    """
+)
+
+
+@pytest.mark.slow
+def test_dryrun_lower_compile_8_devices():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True, text=True,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["flops"] > 0
+    assert res["temp"] > 0
+    assert res["coll_total"] > 0, "SPMD must emit collectives on a 4x2 mesh"
+    assert res["n_collective_kinds"] >= 1
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_bytes
+
+    hlo = """
+      %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %x), replica_groups={}
+      ROOT %ag = bf16[64]{0} all-gather(bf16[32]{0} %y), dimensions={0}
+      %cp = (f32[8,8]{1,0}, f32[8,8]{1,0}) collective-permute(%a, %b)
+      %dead = f32[4]{0} add(f32[4]{0} %p, f32[4]{0} %q)
+    """
+    c = collective_bytes(hlo)
+    assert c["all-reduce"] == 128 * 256 * 4
+    assert c["all-gather"] == 64 * 2
+    assert c["collective-permute"] == 2 * 64 * 4
+    assert c["total_bytes"] == c["all-reduce"] + c["all-gather"] + c["collective-permute"]

@@ -1,0 +1,80 @@
+"""Statistical goodness-of-fit: every sampler must draw from the right
+distribution (chi-square test, no scipy dependency — critical values are
+precomputed for the dof we use)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import sample_categorical
+
+# chi-square 99.9th percentile for dof 1..40 (conservative gate)
+CHI2_999 = {
+    5: 20.52, 7: 24.32, 9: 27.88, 15: 37.70, 19: 43.82, 31: 61.10, 39: 72.05,
+}
+
+
+def _chi2_stat(counts, probs):
+    n = counts.sum()
+    expected = probs * n
+    mask = expected > 5
+    return float(((counts[mask] - expected[mask]) ** 2 / expected[mask]).sum()), int(mask.sum()) - 1
+
+
+@pytest.mark.parametrize("method", ["butterfly", "fenwick", "two_level", "prefix", "gumbel"])
+def test_uniform_distribution(method):
+    K, N = 16, 120_000
+    w = jnp.ones((N, K), jnp.float32)
+    idx = np.array(sample_categorical(w, key=jax.random.PRNGKey(42), method=method, W=8))
+    counts = np.bincount(idx, minlength=K).astype(np.float64)
+    stat, dof = _chi2_stat(counts, np.full(K, 1 / K))
+    assert stat < CHI2_999[15], f"{method}: chi2={stat:.1f} dof={dof}"
+
+
+@pytest.mark.parametrize("method", ["butterfly", "fenwick", "alias"])
+def test_skewed_distribution(method):
+    K, N = 20, 150_000
+    rng = np.random.default_rng(5)
+    probs = rng.dirichlet(np.full(K, 0.3))
+    w = jnp.tile(jnp.array(probs, jnp.float32)[None], (N, 1))
+    idx = np.array(sample_categorical(w, key=jax.random.PRNGKey(1), method=method, W=8))
+    counts = np.bincount(idx, minlength=K).astype(np.float64)
+    stat, dof = _chi2_stat(counts, probs)
+    assert stat < CHI2_999[19], f"{method}: chi2={stat:.1f} dof={dof}"
+
+
+def test_distinct_distributions_per_row():
+    """The paper's exact setting: every sample draws from its OWN
+    distribution.  Verify per-row marginals via repeated draws."""
+    B, K, R = 8, 12, 30_000
+    rng = np.random.default_rng(9)
+    probs = rng.dirichlet(np.full(K, 0.5), size=B)  # (B, K)
+    w = jnp.array(probs, jnp.float32)
+    counts = np.zeros((B, K))
+    wB = jnp.tile(w, (R // B // 4 * 4, 1))  # replicate rows in blocks
+    reps = wB.shape[0] // B
+    wB = jnp.tile(w, (reps, 1))
+    idx = np.array(
+        sample_categorical(wB, key=jax.random.PRNGKey(2), method="butterfly", W=8)
+    ).reshape(reps, B)
+    for b in range(B):
+        counts[b] = np.bincount(idx[:, b], minlength=K)
+    for b in range(B):
+        stat, dof = _chi2_stat(counts[b], probs[b])
+        assert stat < CHI2_999[31], f"row {b}: chi2={stat:.1f}"
+
+
+def test_logits_sampling_temperature():
+    from repro.core import sample_from_logits
+
+    rng = np.random.default_rng(3)
+    logits = jnp.array(rng.normal(size=(4, 64)).astype(np.float32))
+    # temperature 0 == argmax
+    idx = sample_from_logits(logits, jax.random.PRNGKey(0), temperature=0.0)
+    np.testing.assert_array_equal(np.array(idx), np.argmax(np.array(logits), -1))
+    # low temperature concentrates on argmax
+    N = 4000
+    lb = jnp.tile(logits[:1], (N, 1))
+    idx = np.array(sample_from_logits(lb, jax.random.PRNGKey(1), temperature=0.05, method="fenwick", W=8))
+    assert (idx == int(np.argmax(np.array(logits)[0]))).mean() > 0.99

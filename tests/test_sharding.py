@@ -1,0 +1,97 @@
+"""Sharding rules engine unit tests (no multi-device mesh needed: rules
+resolve against a mesh *description*, so we build tiny host meshes)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as shd
+
+
+class FakeMesh:
+    """Duck-typed mesh: axis_names + shape mapping (rules only need these)."""
+
+    def __init__(self, shape):
+        self.axis_names = tuple(shape)
+        self.shape = dict(shape)
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_param_2d_sharding():
+    # embedding (vocab, embed): vocab -> model, embed -> (pod, data)
+    p = shd.spec_for_shape((128256, 4096), ("vocab", "embed"), SINGLE)
+    assert p == P("model", "data")
+    p = shd.spec_for_shape((128256, 4096), ("vocab", "embed"), MULTI)
+    assert p == P("model", ("pod", "data"))
+
+
+def test_odd_vocab_replicates_but_fsdp_survives():
+    p = shd.spec_for_shape((49155, 1024), ("vocab", "embed"), SINGLE)
+    assert p == P(None, "data")
+
+
+def test_heads_not_divisible_drop():
+    # hymba: 25 heads on a 16-way model axis -> replicate heads
+    p = shd.spec_for_shape((1600, 25, 64), ("embed", "heads", "head"), SINGLE)
+    assert p == P("data", None, None)
+
+
+def test_batch_beats_kv_seq():
+    # decode_32k: batch=128 divisible -> batch takes the data axes, and
+    # kv_seq greedily claims the leftover model axis (kv_heads=8 can't)
+    p = shd.spec_for_shape(
+        (128, 32768, 8, 128), ("batch", "kv_seq", "kv_heads", "head"), MULTI
+    )
+    assert p[0] == ("pod", "data")
+    assert p[1] == "model"
+
+
+def test_kv_seq_fallback_when_batch_1():
+    # long_500k: batch=1 -> sequence claims the data axes (flash-decoding)
+    p = shd.spec_for_shape(
+        (1, 524416, 8, 128), ("batch", "kv_seq", "kv_heads", "head"), MULTI
+    )
+    assert p[0] is None
+    assert p[1] == ("pod", "data")
+
+
+def test_no_mesh_axis_reused():
+    # experts and mlp both want 'model': only one gets it
+    p = shd.spec_for_shape(
+        (128, 7168, 4864), ("experts", "embed", "mlp"), SINGLE
+    )
+    used = [a for a in p if a is not None]
+    flat = []
+    for a in used:
+        flat.extend([a] if isinstance(a, str) else list(a))
+    assert len(flat) == len(set(flat))
+    assert p[0] == "model" and p[1] == "data" and p[2] is None
+
+
+def test_optimizer_state_axes_adamw8bit():
+    ax = shd.optimizer_state_axes("adamw8bit", {"w": ("embed", "mlp")})
+    assert ax["w"]["m_q"] == ("qblocks", None)
+
+
+def test_optimizer_state_axes_adafactor():
+    ax = shd.optimizer_state_axes("adafactor", {"w": ("embed", "mlp"), "b": ("embed",)})
+    assert ax["w"] == {"vr": ("embed",), "vc": ("mlp",)}
+    assert ax["b"] == {"v": ("embed",)}
+
+
+def test_rules_priority_order_is_stable():
+    names = [n for n, _ in shd.DEFAULT_RULES]
+    assert names.index("batch") < names.index("kv_seq")
+    assert names.index("embed") < names.index("kv_seq")
+
+
+def test_constrain_activation_noop_without_mesh():
+    shd.set_activation_sharding(None)
+    x = jnp.ones((4, 8, 16))
+    y = shd.constrain_activation(x, ("batch", "act_seq", None))
+    assert y is x

@@ -1,0 +1,180 @@
+"""Training substrate tests: optimizers, train loop convergence, checkpoint
+round-trip + preemption, gradient compression, straggler monitor, pipeline
+determinism."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.pipeline import TokenPipeline
+from repro.dist.compression import (
+    init_error_feedback,
+    simulate_compressed_allreduce,
+)
+from repro.dist.fault import CheckpointManager
+from repro.dist.monitor import StepMonitor
+from repro.models import build_model, init_params
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import make_train_step
+
+
+TINY = ModelConfig(
+    name="tiny", family="dense", num_layers=2, d_model=32, num_heads=4,
+    num_kv_heads=2, d_ff=64, vocab_size=64,
+)
+SHAPE = ShapeConfig("t", seq_len=32, global_batch=8, kind="train")
+
+
+def _setup(opt_name="adamw", **okw):
+    model = build_model(TINY)
+    params = init_params(jax.random.PRNGKey(0), model.specs, jnp.float32)
+    opt = make_optimizer(opt_name, lr=1e-2, warmup=10, total_steps=200, **okw)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, opt, remat="none"))
+    pipe = TokenPipeline(TINY, SHAPE, seed=0)
+    return model, params, opt, opt_state, step_fn, pipe
+
+
+class TestTrainLoop:
+    @pytest.mark.parametrize("opt_name", ["adamw", "adamw8bit", "adafactor"])
+    def test_loss_decreases(self, opt_name):
+        model, params, opt, opt_state, step_fn, pipe = _setup(opt_name)
+        losses = []
+        for step in range(30):
+            batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+            params, opt_state, m = step_fn(params, opt_state, batch, jnp.int32(step))
+            losses.append(float(m.loss))
+        assert np.isfinite(losses).all()
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses[::6]
+
+    def test_8bit_tracks_fp32(self):
+        """8-bit Adam must track fp32 Adam closely over a short run."""
+        _, p32, o32, s32, f32, pipe32 = _setup("adamw")
+        _, p8, o8, s8, f8, pipe8 = _setup("adamw8bit")
+        for step in range(10):
+            b = {k: jnp.asarray(v) for k, v in pipe32.next_batch().items()}
+            p32, s32, m32 = f32(p32, s32, b, jnp.int32(step))
+            p8, s8, m8 = f8(p8, s8, b, jnp.int32(step))
+        rel = abs(float(m32.loss) - float(m8.loss)) / float(m32.loss)
+        assert rel < 0.05, (float(m32.loss), float(m8.loss))
+
+    def test_grad_clip_bounds_update(self):
+        model, params, opt, opt_state, step_fn, pipe = _setup()
+        batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+        _, _, m = step_fn(params, opt_state, batch, jnp.int32(0))
+        assert np.isfinite(float(m.grad_norm))
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_gc(self, tmp_path):
+        model, params, opt, opt_state, step_fn, pipe = _setup()
+        mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+        tree = {"params": params, "opt": opt_state}
+        for s in (1, 2, 3):
+            mgr.save(s, tree, extra={"cursor": pipe.cursor(), "step": s})
+        assert mgr.latest_step() == 3
+        # gc kept only 2
+        kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+        assert len(kept) == 2
+        restored, extra = mgr.restore(like=tree)
+        assert extra["step"] == 3
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_restore_resumes_identically(self, tmp_path):
+        """Train 5 steps, checkpoint, train 5 more; vs restore + 5: same."""
+        model, params, opt, opt_state, step_fn, pipe = _setup()
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        for step in range(5):
+            b = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+            params, opt_state, _ = step_fn(params, opt_state, b, jnp.int32(step))
+        mgr.save(5, {"params": params, "opt": opt_state}, extra={"cursor": pipe.cursor()})
+
+        def continue_from(params, opt_state, pipe, start):
+            for step in range(start, start + 5):
+                b = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+                params, opt_state, m = step_fn(params, opt_state, b, jnp.int32(step))
+            return float(m.loss)
+
+        loss_a = continue_from(params, opt_state, pipe, 5)
+
+        (restored, extra) = mgr.restore(like={"params": params, "opt": opt_state})
+        pipe2 = TokenPipeline(TINY, SHAPE, seed=0)
+        pipe2.restore(extra["cursor"])
+        loss_b = continue_from(restored["params"], restored["opt"], pipe2, 5)
+        assert loss_a == pytest.approx(loss_b, rel=1e-6)
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_save=True)
+        tree = {"x": jnp.arange(100.0)}
+        mgr.save(1, tree)
+        mgr.wait()
+        restored, _ = mgr.restore(like=tree)
+        np.testing.assert_array_equal(np.asarray(restored["x"]), np.arange(100.0))
+
+
+class TestCompression:
+    def test_error_feedback_converges(self):
+        """Mean of compressed gradients with error feedback ~= true mean
+        over time (bias vanishes)."""
+        rng = np.random.default_rng(0)
+        workers = 4
+        grads = [jnp.array(rng.normal(size=(256,)), jnp.float32) for _ in range(workers)]
+        residuals = [jnp.zeros((256,), jnp.float32) for _ in range(workers)]
+        true_mean = np.mean([np.array(g) for g in grads], axis=0)
+        acc_est = np.zeros(256)
+        acc_true = np.zeros(256)
+        for _ in range(20):
+            est, residuals = simulate_compressed_allreduce(grads, residuals)
+            acc_est += np.array(est)
+            acc_true += true_mean
+        # accumulated estimate converges (error feedback cancels bias)
+        rel = np.abs(acc_est - acc_true).max() / np.abs(acc_true).max()
+        assert rel < 5e-3, rel
+
+    def test_quantize_roundtrip_bound(self):
+        from repro.dist.compression import dequantize_int8, quantize_int8
+
+        x = jnp.array(np.random.default_rng(1).normal(size=(1000,)), jnp.float32)
+        q, s = quantize_int8(x)
+        err = np.abs(np.array(dequantize_int8(q, s)) - np.array(x)).max()
+        assert err <= float(s) * 0.5 + 1e-7
+
+
+class TestMonitor:
+    def test_flags_straggler(self):
+        mon = StepMonitor(num_hosts=8)
+        rng = np.random.default_rng(0)
+        for _ in range(16):
+            t = rng.normal(1.0, 0.01, size=8)
+            t[3] = 2.5  # host 3 is consistently slow
+            mon.record(t)
+        assert mon.flagged_hosts() == [3]
+        w = mon.shard_weights()
+        assert w[3] < 0.6 and abs(w.sum() - 8) < 1e-6
+
+    def test_no_false_positives(self):
+        mon = StepMonitor(num_hosts=8)
+        rng = np.random.default_rng(1)
+        for _ in range(16):
+            mon.record(rng.normal(1.0, 0.01, size=8))
+        assert mon.flagged_hosts() == []
+
+
+class TestPipeline:
+    def test_determinism_and_cursor(self):
+        p1 = TokenPipeline(TINY, SHAPE, seed=7)
+        b1 = [p1.next_batch()["tokens"] for _ in range(3)]
+        p2 = TokenPipeline(TINY, SHAPE, seed=7)
+        p2.restore({"seed": 7, "step": 2})
+        np.testing.assert_array_equal(p2.next_batch()["tokens"], b1[2])
+
+    def test_sharding_disjoint_streams(self):
+        a = TokenPipeline(TINY, SHAPE, seed=7, num_shards=2, shard=0)
+        b = TokenPipeline(TINY, SHAPE, seed=7, num_shards=2, shard=1)
+        assert a.local_batch == 4
+        assert not np.array_equal(a.next_batch()["tokens"], b.next_batch()["tokens"])

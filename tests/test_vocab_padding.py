@@ -1,0 +1,78 @@
+"""Vocab padding (Megatron-style) must not change semantics: padded logit
+columns are masked, loss and sampling see the real vocabulary."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model, init_params
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import make_train_step
+
+
+CFG = ModelConfig(
+    name="t", family="dense", num_layers=2, d_model=32, num_heads=4,
+    num_kv_heads=2, d_ff=64, vocab_size=50,  # odd on purpose
+)
+
+
+def test_padded_shapes_and_masking():
+    cfg = dataclasses.replace(CFG, pad_vocab_multiple=16)
+    assert cfg.padded_vocab == 64
+    model = build_model(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.specs, jnp.float32)
+    assert params["embed"]["table"].shape[0] == 64
+    toks = jnp.array(np.random.default_rng(0).integers(0, 50, (2, 12)), jnp.int32)
+    logits, _ = model.apply(params, {"tokens": toks}, remat="none")
+    assert logits.shape[-1] == 64
+    lg = np.array(logits, np.float32)
+    assert (lg[..., 50:] < -1e29).all(), "padded columns must be -inf"
+    assert np.isfinite(lg[..., :50]).all()
+
+
+def test_loss_unchanged_by_padding():
+    """Same params (embedded into the padded table) -> same CE loss."""
+    rng = np.random.default_rng(1)
+    toks = jnp.array(rng.integers(0, 50, (2, 16)), jnp.int32)
+
+    model_a = build_model(CFG)
+    params_a = init_params(jax.random.PRNGKey(0), model_a.specs, jnp.float32)
+
+    cfg_b = dataclasses.replace(CFG, pad_vocab_multiple=16)
+    model_b = build_model(cfg_b)
+    params_b = init_params(jax.random.PRNGKey(0), model_b.specs, jnp.float32)
+    # copy the real rows of a into b's padded tables
+    params_b["embed"]["table"] = params_b["embed"]["table"].at[:50].set(
+        params_a["embed"]["table"]
+    )
+    params_b["unembed"]["table"] = params_b["unembed"]["table"].at[:, :50].set(
+        params_a["unembed"]["table"]
+    )
+    params_b["layers"] = params_a["layers"]
+    params_b["final_norm"] = params_a["final_norm"]
+
+    from repro.train.train_step import cross_entropy
+
+    la, _ = model_a.apply(params_a, {"tokens": toks}, remat="none")
+    lb, _ = model_b.apply(params_b, {"tokens": toks}, remat="none")
+    labels = toks[:, 1:]
+    mask = jnp.ones_like(labels, jnp.float32)
+    ca, _ = cross_entropy(la[:, :-1], labels, mask, z_loss=0.0)
+    cb, _ = cross_entropy(lb[:, :-1], labels, mask, z_loss=0.0)
+    assert float(ca) == jax.numpy.asarray(cb).item()
+
+
+def test_sampling_never_returns_padded_ids():
+    from repro.serve.engine import generate
+
+    cfg = dataclasses.replace(CFG, pad_vocab_multiple=16, sampler_method="fenwick",
+                              sampler_W=8)
+    model = build_model(cfg)
+    params = init_params(jax.random.PRNGKey(3), model.specs, jnp.float32)
+    toks = jnp.array(np.random.default_rng(2).integers(0, 50, (3, 8)), jnp.int32)
+    r = generate(model, params, {"tokens": toks}, max_new_tokens=12,
+                 temperature=1.5, key=jax.random.PRNGKey(4))
+    assert (r.tokens < 50).all(), r.tokens.max()
