@@ -3,14 +3,23 @@
 
 Reports us per draw-batch and draws/s; plus the derived HBM-traffic model
 (bytes per sample) that grounds the TPU prediction for each method.
+
+Also writes ``BENCH_sampler.json`` (path via ``--json PATH``, suppress
+with ``--no-json``) — per-method timing records in the
+``repro-autotune-bench-v1`` schema the tuning cache consumes
+(``TuningCache.ingest_records`` / ``autotune_bench --import``), so a bench
+run doubles as a pre-warm of the autotune cache.
 """
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.autotune.cache import BENCH_SCHEMA
 from repro.core import sample_categorical
 
 METHODS = ("prefix", "butterfly", "fenwick", "two_level", "gumbel")
@@ -64,14 +73,43 @@ def run(Bs=(4096,), Ks=(64, 256, 1024, 4096), W=32):
     return rows
 
 
-def main():
+def write_json(rows, path: str = "BENCH_sampler.json", W: int = 32) -> str:
+    """Emit the rows as autotune-ingestible bench records."""
+    blob = {
+        "schema": BENCH_SCHEMA,
+        "backend": jax.default_backend(),
+        "records": [
+            {
+                "backend": jax.default_backend(),
+                "B": r["B"], "K": r["K"], "W": W, "draws": 1,
+                "dtype": "float32", "method": r["method"], "us": r["us"],
+            }
+            for r in rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(blob, f, indent=1)
+    return path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_sampler.json", metavar="PATH",
+                    help="where to write the autotune-ingestible records")
+    ap.add_argument("--no-json", action="store_true",
+                    help="CSV to stdout only, write no file")
+    args = ap.parse_args(argv)
+    rows = run()
     print("name,us_per_call,derived")
-    for r in run():
+    for r in rows:
         print(
             f"sampler_{r['method']}_B{r['B']}_K{r['K']},{r['us']:.0f},"
             f"draws_per_s={r['draws_per_s']:.3g};"
             f"model_bytes_per_sample={r['model_bytes_per_sample']:.0f}"
         )
+    if not args.no_json:
+        path = write_json(rows, args.json)
+        print(f"# wrote {path} ({BENCH_SCHEMA}; feed to autotune_bench --import)")
 
 
 if __name__ == "__main__":

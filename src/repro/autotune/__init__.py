@@ -1,0 +1,83 @@
+"""Autotuned sampler dispatch: pick the right drawing strategy per workload.
+
+The paper's core result is regime-dependent — butterfly-patterned partial
+sums beat full prefix sums only once K is large enough (K ~ 200 in Fig. 3),
+Gumbel-max wins at tiny K, and alias tables win when one distribution is
+drawn from many times.  This subsystem makes ``method="auto"`` (the default
+across the serve engine and the LDA Gibbs sampler) resolve to a concrete
+strategy through three layers:
+
+  1. :mod:`repro.autotune.cost_model` — analytical per-method cost from
+     (B, K, draws-per-distribution, dtype, backend); no timing needed.
+  2. :mod:`repro.autotune.tuner` + :mod:`repro.autotune.cache` — measured
+     tuning: time the candidates on the real shapes once, persist winners
+     to a JSON cache keyed by (backend, shape-bucket), fall back to the
+     cost model on a miss.  Set ``REPRO_AUTOTUNE=measure`` to enable
+     timing (default ``model``); ``REPRO_AUTOTUNE_CACHE`` overrides the
+     cache path (default ``~/.cache/repro/autotune.json``).
+  3. :mod:`repro.autotune.tables` — memoized alias/Fenwick tables for
+     repeated distributions, with explicit invalidation.
+
+Typical use is implicit (``sample_categorical(w, key=k, method="auto")``),
+but everything is addressable::
+
+    from repro import autotune
+    method, W = autotune.resolve(B=4096, K=1024)      # what would run?
+    autotune.get_tuner().cache.save()                 # persist winners
+    autotune.get_table_cache().invalidate("lda_phi")  # phi was resampled
+"""
+
+from repro.autotune.cache import (
+    BENCH_SCHEMA,
+    SCHEMA,
+    TuningCache,
+    bucket_key,
+    default_cache_path,
+)
+from repro.autotune.cost_model import (
+    BACKENDS,
+    BackendParams,
+    choose,
+    default_w,
+    method_cost_eq,
+    predict_us,
+    rank_methods,
+)
+from repro.autotune.tables import TableCache, get_table_cache, reset_table_cache
+from repro.autotune.tuner import (
+    Tuner,
+    candidate_methods,
+    get_tuner,
+    measure_method,
+    reset_tuner,
+)
+
+
+def resolve(
+    B: int,
+    K: int,
+    *,
+    draws: int = 1,
+    dtype_name: str = "float32",
+    has_key: bool = True,
+):
+    """Module-level convenience: the global tuner's (method, W) for a
+    workload descriptor."""
+    return get_tuner().resolve(
+        B, K, draws=draws, dtype_name=dtype_name, has_key=has_key
+    )
+
+
+def reset() -> None:
+    """Drop all process-global autotune state (tests re-point the cache)."""
+    reset_tuner()
+    reset_table_cache()
+
+
+__all__ = [
+    "BACKENDS", "BENCH_SCHEMA", "SCHEMA", "BackendParams", "TableCache",
+    "Tuner", "TuningCache", "bucket_key", "candidate_methods", "choose",
+    "default_cache_path", "default_w", "get_table_cache", "get_tuner",
+    "measure_method", "method_cost_eq", "predict_us", "rank_methods",
+    "reset", "reset_table_cache", "reset_tuner", "resolve",
+]

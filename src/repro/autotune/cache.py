@@ -1,0 +1,236 @@
+"""Persistent tuning cache (autotune layer 2 storage).
+
+Winners are keyed by ``(backend, shape-bucket)`` where the shape bucket
+rounds B, K and draws-per-distribution up to powers of two — shapes inside
+one bucket share a winner, so tuning a 4096-vocab decode once covers every
+vocab in (2048, 4096].
+
+On-disk format (``~/.cache/repro/autotune.json`` by default, overridable
+via ``$REPRO_AUTOTUNE_CACHE``)::
+
+    {
+      "schema": "repro-autotune-v1",
+      "entries": {
+        "cpu|B4096|K1024|d1|float32|key": {
+          "method": "two_level", "W": 32, "us": 184.2,
+          "source": "measured" | "model" | "bench"
+        },
+        ...
+      }
+    }
+
+(the trailing ``key``/``nokey`` records whether the caller had a PRNG key
+— the two candidate sets differ, so they tune independently)
+
+``benchmarks/sampler_bench.py --json`` emits per-method timing *records*
+in the same schema family (``repro-autotune-bench-v1``); feed them to
+``TuningCache.ingest_records`` (or ``benchmarks/autotune_bench.py
+--import``) to pre-warm the cache from a bench run.
+
+Writes are atomic (tmp file + ``os.replace``) and a corrupt or
+wrong-schema file is treated as empty rather than raised.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from typing import Dict, Iterable, List, Optional
+
+SCHEMA = "repro-autotune-v1"
+BENCH_SCHEMA = "repro-autotune-bench-v1"
+
+# precedence when deciding whether a new record may overwrite an old one
+_SOURCE_RANK = {"model": 0, "bench": 1, "measured": 2}
+
+
+def default_cache_path() -> str:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "autotune.json"
+    )
+
+
+def _bucket(n: int) -> int:
+    """Round up to a power of two (1 stays 1)."""
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
+
+
+def bucket_key(
+    backend: str, B: int, K: int, draws: int, dtype: str, has_key: bool = True
+) -> str:
+    """Shape-bucket cache key.  ``has_key`` is part of the key: callers
+    without a PRNG key have a smaller candidate set (no gumbel/alias), so
+    a keyed winner must not shadow — or be clobbered by — the key-less
+    winner for the same shapes."""
+    kd = "key" if has_key else "nokey"
+    return f"{backend}|B{_bucket(B)}|K{_bucket(K)}|d{_bucket(draws)}|{dtype}|{kd}"
+
+
+class TuningCache:
+    """In-memory winner table with JSON persistence.  Thread-safe."""
+
+    def __init__(self, path: Optional[str] = None, autoload: bool = True):
+        self.path = path or default_cache_path()
+        self._lock = threading.Lock()
+        self._entries: Dict[str, Dict] = {}
+        self._dirty = False
+        if autoload:
+            self.load()
+
+    # -- persistence ------------------------------------------------------
+
+    def load(self) -> int:
+        """Merge entries from ``self.path``; returns how many were read."""
+        try:
+            with open(self.path) as f:
+                blob = json.load(f)
+        except (OSError, ValueError):
+            return 0
+        if not isinstance(blob, dict) or blob.get("schema") != SCHEMA:
+            return 0
+        entries = blob.get("entries")
+        if not isinstance(entries, dict):
+            return 0
+        n = 0
+        with self._lock:
+            for k, v in entries.items():
+                if isinstance(v, dict) and "method" in v:
+                    self._entries.setdefault(k, v)
+                    n += 1
+        return n
+
+    def save(self, path: Optional[str] = None) -> str:
+        """Atomically write the cache; returns the path written."""
+        path = path or self.path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with self._lock:
+            blob = {"schema": SCHEMA, "entries": dict(self._entries)}
+        fd, tmp = tempfile.mkstemp(
+            dir=os.path.dirname(path) or ".", suffix=".tmp"
+        )
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(blob, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        # only after the atomic replace succeeded — a failed write must
+        # leave the cache dirty so save_if_dirty retries later
+        with self._lock:
+            self._dirty = False
+        return path
+
+    def save_if_dirty(self) -> Optional[str]:
+        if self._dirty:
+            try:
+                return self.save()
+            except OSError:
+                return None  # read-only FS: keep the in-memory cache working
+        return None
+
+    # -- lookup / update --------------------------------------------------
+
+    def get(self, key: str) -> Optional[Dict]:
+        with self._lock:
+            return self._entries.get(key)
+
+    def put(
+        self,
+        key: str,
+        method: str,
+        W: int,
+        us: float,
+        source: str = "measured",
+    ) -> Dict:
+        """Record a winner.  Lower-precedence sources never clobber
+        higher-precedence ones (a cost-model guess won't erase a measured
+        winner), equal-precedence keeps the faster entry."""
+        rec = {"method": method, "W": int(W), "us": float(us), "source": source}
+        rank = _SOURCE_RANK.get(source, 0)
+        with self._lock:
+            old = self._entries.get(key)
+            if old is not None:
+                old_rank = _SOURCE_RANK.get(old.get("source"), 0)
+                if old_rank > rank:
+                    return old
+                if old_rank == rank and old.get("us", float("inf")) <= us:
+                    return old
+            self._entries[key] = rec
+            self._dirty = True
+        return rec
+
+    def ingest_records(self, blob_or_records, source: str = "bench") -> int:
+        """Pre-warm from bench records: pick the per-bucket argmin.
+
+        Accepts the ``repro-autotune-bench-v1`` blob emitted by
+        ``sampler_bench --json``, a bare record list
+        ``[{backend, B, K, draws?, dtype?, method, W?, us}, ...]``, or a
+        ``repro-autotune-v1`` cache file (another machine's winners,
+        merged entry-by-entry).  Returns the number of buckets updated.
+        """
+        if isinstance(blob_or_records, dict):
+            schema = blob_or_records.get("schema")
+            if schema == SCHEMA:  # a cache file: merge its entries directly
+                n = 0
+                for key, rec in (blob_or_records.get("entries") or {}).items():
+                    try:
+                        # require a real timing: a defaulted us would rank
+                        # as an unbeatable 0-cost winner forever
+                        self.put(key, rec["method"], rec.get("W", 32),
+                                 float(rec["us"]), source=source)
+                        n += 1
+                    except (KeyError, TypeError, ValueError):
+                        continue
+                return n
+            if schema != BENCH_SCHEMA:
+                return 0
+            records: Iterable[Dict] = blob_or_records.get("records", [])
+        else:
+            records = blob_or_records
+        # timing records cover both caller kinds: the key-less bucket only
+        # considers methods a u-based caller can run
+        from repro.autotune.tuner import KEY_METHODS
+
+        best: Dict[str, Dict] = {}
+        for r in records:
+            try:
+                us = float(r["us"])
+                for has_key in (True, False):
+                    if not has_key and r["method"] in KEY_METHODS:
+                        continue
+                    key = bucket_key(
+                        r.get("backend", "cpu"), r["B"], r["K"],
+                        r.get("draws", 1), r.get("dtype", "float32"),
+                        has_key=has_key,
+                    )
+                    if key not in best or us < best[key]["us"]:
+                        best[key] = {"method": r["method"],
+                                     "W": int(r.get("W", 32)), "us": us}
+            except (KeyError, TypeError, ValueError):
+                continue
+        for key, rec in best.items():
+            self.put(key, rec["method"], rec["W"], rec["us"], source=source)
+        return len(best)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._dirty = True
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def items(self) -> List:
+        with self._lock:
+            return sorted(self._entries.items())

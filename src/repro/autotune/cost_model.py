@@ -1,0 +1,218 @@
+"""Analytical per-method sampling cost model (autotune layer 1).
+
+Predicts the cost of drawing one index per row of a (B, K) weight matrix
+for every registered strategy, from only the workload descriptor
+
+    (B, K, draws-per-distribution, dtype, backend)
+
+so ``method="auto"`` can pick a sampler without timing anything.  Costs are
+expressed in *effective bytes per row* — real HBM traffic plus byte-
+equivalents for the non-traffic terms that dominate at the extremes
+(per-row gathers, RNG/transcendental work, serial preprocessing) — then
+converted to microseconds with per-backend bandwidth and launch constants.
+
+The traffic terms are seeded from the paper's memory-access counts
+(§4: butterfly reads K, writes K/W block sums, walks one W-block) and the
+derived model in ``benchmarks/sampler_bench.traffic_model_bytes``; the
+non-traffic constants are fitted so the model reproduces the paper's
+observed regimes:
+
+  * full prefix sums win at small K; butterfly-patterned partial sums take
+    over near K ~ 200 (paper Fig. 3, Titan Black),
+  * Gumbel-max (one pass, no table) wins only at tiny K,
+  * alias tables win once the same distribution is drawn from ~a dozen or
+    more times, so the serial O(K) build amortizes (Lehmann et al. 2021);
+    with ``draws == 1`` — the paper's setting — they always lose.
+
+The model deliberately stays monotonic in K for every method (each term
+has a nonnegative dK coefficient): ``tests/test_autotune.py`` pins that.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Backend descriptors
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendParams:
+    """Bandwidth / overhead constants used to turn bytes into microseconds."""
+
+    name: str
+    bandwidth_gbps: float     # effective streaming bandwidth
+    launch_us: float          # fixed per-dispatch overhead
+    seq_penalty: float        # multiplier on inherently serial preprocessing
+    # byte-equivalent of one counter-RNG draw + log per element: cheap on
+    # the accelerators threefry was built for, dominant on CPU (measured
+    # ~40x two_level at K=64 in autotune_bench)
+    rng_eq: float = 12.0
+    # the pltpu kernels compile natively (vs interpret-mode emulation);
+    # TPU only — must stay in sync with repro.kernels' availability rule
+    has_pallas: bool = False
+
+
+BACKENDS: Dict[str, BackendParams] = {
+    "cpu": BackendParams("cpu", bandwidth_gbps=40.0, launch_us=5.0, seq_penalty=8.0,
+                         rng_eq=64.0),
+    "gpu": BackendParams("gpu", bandwidth_gbps=500.0, launch_us=8.0, seq_penalty=24.0),
+    "tpu": BackendParams("tpu", bandwidth_gbps=800.0, launch_us=10.0, seq_penalty=32.0,
+                         has_pallas=True),
+}
+
+
+def backend_params(backend: str) -> BackendParams:
+    return BACKENDS.get(backend, BACKENDS["cpu"])
+
+
+# ---------------------------------------------------------------------------
+# Per-method effective-byte model
+# ---------------------------------------------------------------------------
+
+# byte-equivalent of one per-row gather (a cache/VMEM line touch)
+LINE_EQ = 128.0
+# fixed per-row setup of the blocked (butterfly-family) methods: block
+# bookkeeping, padding, two-phase control.  Fitted so the prefix/butterfly
+# crossover lands near the paper's K ~ 200 (Fig. 3).
+BLOCK_SETUP_EQ = 640.0
+# extra per-element-per-round compute of the paper-faithful butterfly
+# (log2(W) replacement rounds touch every element; the Fenwick variant
+# does W-1 adds per block instead — DESIGN.md §2)
+BUTTERFLY_ROUND_EQ = 1.0
+# fused-kernel discount: pass A/B share one dispatch and block sums stay
+# in VMEM on TPU
+KERNEL_FUSION = 0.7
+# the methods whose built tables repro.core.api reuses across calls when
+# the caller passes dist_key (see the table cache in repro.autotune.tables)
+CACHED_TABLE_METHODS = ("alias", "fenwick")
+
+
+def default_w(K: int) -> int:
+    """W ~ sqrt(K) (minimizes K/W + W), rounded to a power of two in
+    [8, 128] — 128 is the measured optimum at vocab scale
+    (EXPERIMENTS §Perf W-sweep)."""
+    if K <= 64:
+        return 8
+    w = 2 ** int(round(math.log2(math.sqrt(K))))
+    return max(8, min(128, w))
+
+
+def method_cost_eq(
+    method: str,
+    K: int,
+    *,
+    W: Optional[int] = None,
+    draws: int = 1,
+    dtype_bytes: int = 4,
+    backend: str = "cpu",
+) -> float:
+    """Effective bytes per row for one draw, with the table build amortized
+    over ``draws`` uses of the same distribution.
+
+    Amortization only applies to methods whose tables the sampling API
+    actually reuses between calls via the table cache (alias / fenwick —
+    the ``dist_key`` paths in ``repro.core.api``); everything else redoes
+    its work every call, so the build term is charged in full.
+    """
+    bp = backend_params(backend)
+    c = float(dtype_bytes)
+    d = max(int(draws), 1) if method in CACHED_TABLE_METHODS else 1
+    W = W or default_w(K)
+    log2K = math.log2(max(K, 2))
+    log2W = math.log2(max(W, 2))
+
+    if method == "prefix":
+        build = 2.0 * K * c                        # read weights + write prefix
+        draw = log2K * LINE_EQ                     # binary-search gathers
+    elif method == "fenwick":
+        build = (K + K / W) * c + K                # table write + W-1 adds/block
+        draw = (log2W + 1.0) * LINE_EQ + BLOCK_SETUP_EQ
+    elif method == "butterfly":
+        build = (K + K / W) * c + K * log2W * BUTTERFLY_ROUND_EQ
+        draw = (log2W + 1.0) * LINE_EQ + BLOCK_SETUP_EQ
+    elif method == "two_level":
+        # block sums only — no K-length table ever materializes; the draw
+        # re-reads the selected W-block and cumsums it in registers
+        build = (K + K / W) * c
+        draw = W * c + 2.0 * LINE_EQ + BLOCK_SETUP_EQ
+    elif method == "kernel":
+        base = method_cost_eq(
+            "two_level", K, W=W, draws=d, dtype_bytes=dtype_bytes, backend=backend
+        )
+        if not bp.has_pallas:
+            # interpret mode: every Pallas op is a Python-level emulation
+            return base * 1000.0
+        return base * KERNEL_FUSION
+    elif method == "gumbel":
+        build = 0.0
+        draw = K * (c + bp.rng_eq)                 # full pass + RNG/log per draw
+    elif method == "alias":
+        # Vose build is O(K) but serial (two worklists): charged the
+        # backend's serialization penalty.  Draws are O(1): two gathers.
+        build = bp.seq_penalty * K * c
+        draw = 2.0 * LINE_EQ + c
+    else:
+        raise ValueError(f"cost model knows no method {method!r}")
+    return build / d + draw
+
+
+def predict_us(
+    method: str,
+    B: int,
+    K: int,
+    *,
+    W: Optional[int] = None,
+    draws: int = 1,
+    dtype_bytes: int = 4,
+    backend: str = "cpu",
+) -> float:
+    """Predicted microseconds for one (B, K) draw batch."""
+    bp = backend_params(backend)
+    eq = method_cost_eq(
+        method, K, W=W, draws=draws, dtype_bytes=dtype_bytes, backend=backend
+    )
+    return bp.launch_us + B * eq / (bp.bandwidth_gbps * 1e3)
+
+
+def rank_methods(
+    candidates: Sequence[str],
+    B: int,
+    K: int,
+    *,
+    draws: int = 1,
+    dtype_bytes: int = 4,
+    backend: str = "cpu",
+) -> List[Tuple[float, str, int]]:
+    """Sort candidate methods by predicted cost: [(us, method, W), ...]."""
+    W = default_w(K)
+    ranked = [
+        (
+            predict_us(m, B, K, W=W, draws=draws, dtype_bytes=dtype_bytes,
+                       backend=backend),
+            m,
+            W,
+        )
+        for m in candidates
+    ]
+    ranked.sort(key=lambda t: (t[0], t[1]))
+    return ranked
+
+
+def choose(
+    candidates: Sequence[str],
+    B: int,
+    K: int,
+    *,
+    draws: int = 1,
+    dtype_bytes: int = 4,
+    backend: str = "cpu",
+) -> Tuple[str, int, float]:
+    """Best (method, W, predicted_us) among ``candidates``."""
+    us, method, W = rank_methods(
+        candidates, B, K, draws=draws, dtype_bytes=dtype_bytes, backend=backend
+    )[0]
+    return method, W, us

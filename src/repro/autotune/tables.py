@@ -1,0 +1,135 @@
+"""Reusable table cache (autotune layer 3).
+
+Alias and Fenwick tables are pure functions of the weight matrix — when
+the same distributions are drawn from repeatedly (a static unigram vocab
+in decode, a fixed phi inside one LDA sweep), rebuilding them every call
+wastes the dominant O(K) term.  The cached kinds are exactly the ones
+``repro.core.api`` can draw from a prebuilt table
+(``cost_model.CACHED_TABLE_METHODS`` stays in sync — amortized build cost
+must mean actual reuse).  :class:`TableCache` memoizes built
+tables under a *caller-provided* distribution key with explicit
+invalidation: we never fingerprint array contents (hashing device arrays
+forces a host transfer), so the caller owns the contract "same key ==>
+same weights" and calls :meth:`invalidate` when the distribution changes
+(e.g. after every phi resample).
+
+Entries are LRU-evicted beyond ``max_entries``.  Tracer-safe: inside a
+``jax.jit`` trace the weights are abstract, so caching is silently skipped
+(the caller gets a freshly built — traced — table).
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any, Optional, Tuple
+
+BUILDERS = ("alias", "fenwick")
+
+
+def _is_tracer(x) -> bool:
+    import jax
+
+    return isinstance(x, jax.core.Tracer)
+
+
+def _build(kind: str, weights, W: Optional[int]):
+    from repro.core import alias as _alias
+    from repro.core import butterfly as _bfly
+
+    W = W or _bfly.DEFAULT_W
+    if kind == "alias":
+        return _alias.build_alias_tables(weights)
+    # _prep is the uncached draw paths' dtype normalization + padding —
+    # sharing it keeps cached tables bit-identical to per-call builds
+    if kind == "fenwick":
+        wp, _, _ = _bfly._prep(weights, W, group_pad=False)
+        return _bfly.build_fenwick_table(wp, W)
+    raise ValueError(f"unknown table kind {kind!r}; options: {BUILDERS}")
+
+
+class TableCache:
+    """LRU memo of built sampling tables, keyed by (dist_key, kind, W,
+    shape, dtype)."""
+
+    def __init__(self, max_entries: int = 16):
+        self.max_entries = max_entries
+        self._lock = threading.Lock()
+        self._entries: "collections.OrderedDict[Tuple, Any]" = (
+            collections.OrderedDict()
+        )
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_build(
+        self,
+        dist_key: str,
+        kind: str,
+        weights,
+        W: Optional[int] = None,
+    ):
+        """Return the cached table for ``dist_key`` or build and cache it.
+
+        The shape/dtype of ``weights`` is part of the internal key, so a
+        stale ``dist_key`` reused at a different shape misses instead of
+        returning a wrong-shaped table — but same-shape different-*values*
+        reuse is on the caller (invalidate on change).
+        """
+        if _is_tracer(weights):
+            return _build(kind, weights, W)  # inside jit: no caching
+        key = (str(dist_key), kind, W, tuple(weights.shape), str(weights.dtype))
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return self._entries[key]
+        table = _build(kind, weights, W)
+        with self._lock:
+            self.misses += 1
+            self._entries[key] = table
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+        return table
+
+    def invalidate(self, dist_key: str) -> int:
+        """Drop every entry for ``dist_key`` (all kinds/shapes); returns
+        how many were removed."""
+        dist_key = str(dist_key)
+        with self._lock:
+            doomed = [k for k in self._entries if k[0] == dist_key]
+            for k in doomed:
+                del self._entries[k]
+        return len(doomed)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.hits = 0
+            self.misses = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "entries": len(self._entries),
+                "hits": self.hits,
+                "misses": self.misses,
+            }
+
+
+_GLOBAL: Optional[TableCache] = None
+
+
+def get_table_cache() -> TableCache:
+    global _GLOBAL
+    if _GLOBAL is None:
+        _GLOBAL = TableCache()
+    return _GLOBAL
+
+
+def reset_table_cache() -> None:
+    global _GLOBAL
+    _GLOBAL = None

@@ -1,0 +1,252 @@
+"""Measured tuner (autotune layer 2).
+
+``Tuner.resolve`` is the single entry point behind ``method="auto"``: it
+maps a workload descriptor (B, K, draws, dtype, has key?) to a concrete
+(method, W) pair.
+
+Resolution order:
+
+  1. in-memory / persisted :class:`TuningCache` hit for the shape bucket
+     (a measured or bench-imported winner beats a cost-model guess),
+  2. on miss, mode ``measure``: time every candidate on synthetic data of
+     the *real* shape, persist the winner (``source="measured"``),
+  3. on miss, mode ``model`` (the default): rank candidates with the
+     analytical cost model, persist the pick (``source="model"``) so the
+     next process skips even the model walk,
+  4. mode ``off``: cost model every time, nothing persisted.
+
+The mode comes from ``$REPRO_AUTOTUNE`` (``measure`` | ``model`` | ``off``).
+``measure`` re-tunes buckets whose cached entry is only a model guess and
+upgrades them in place.
+
+``resolve`` is safe to call during ``jax.jit`` tracing (the serve engine's
+decode step resolves there): it only consults static shapes.  Timing,
+however, is NOT trace-safe — on current jax a nested jitted call made
+during an outer trace is staged rather than executed, so a stopwatch
+around it measures tracing time.  ``resolve`` therefore never measures
+while a trace is active: it falls back to the cost model and persists the
+pick as ``source="model"`` so a later eager measure-mode resolve upgrades
+it with a real timing.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.autotune import cost_model
+from repro.autotune.cache import TuningCache, bucket_key
+
+# methods that draw from a precomputed uniform ``u`` — always candidates
+U_METHODS = ("prefix", "fenwick", "two_level", "butterfly")
+# methods that need a PRNG key — candidates only when the caller has one
+KEY_METHODS = ("gumbel", "alias")
+
+MODES = ("measure", "model", "off")
+
+
+def _mode_from_env() -> str:
+    mode = os.environ.get("REPRO_AUTOTUNE", "model").lower()
+    return mode if mode in MODES else "model"
+
+
+def _tracing_active() -> bool:
+    """True while inside a jax trace, where wall-clock timing would
+    measure tracing (staged nested jits), not execution."""
+    import jax
+
+    try:
+        return not jax.core.trace_state_clean()
+    except AttributeError:  # very old/new jax: assume eager
+        return False
+
+
+def candidate_methods(
+    B: int, K: int, backend: str, has_key: bool
+) -> Tuple[str, ...]:
+    """All viable strategies for this workload: core u-based methods,
+    key-based methods when a key is available, plus whatever the kernels
+    registry says compiles natively on this backend."""
+    from repro import kernels
+
+    cands = list(U_METHODS)
+    if has_key:
+        cands.extend(KEY_METHODS)
+    cands.extend(kernels.candidates(B, K, backend))
+    return tuple(dict.fromkeys(cands))  # dedupe, keep order
+
+
+def measure_method(
+    method: str,
+    B: int,
+    K: int,
+    W: int,
+    *,
+    dtype=None,
+    iters: int = 3,
+    warmup: int = 1,
+    seed: int = 0,
+) -> Optional[float]:
+    """Median wall-clock microseconds of one jitted (B, K) draw batch on
+    synthetic weights; ``None`` if the method fails on this shape."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import api as _api
+
+    dtype = dtype or jnp.float32
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.uniform(0.1, 1.0, size=(B, K)), dtype=dtype)
+    u = jnp.asarray(rng.uniform(0.0, 1.0, size=(B,)), jnp.float32)
+    key = jax.random.PRNGKey(seed)
+
+    try:
+        if method in KEY_METHODS:
+            fn = jax.jit(
+                lambda w, k: _api.sample_categorical(w, key=k, method=method, W=W)
+            )
+            args = (w, key)
+        else:
+            fn = jax.jit(
+                lambda w, u: _api.sample_categorical(w, u=u, method=method, W=W)
+            )
+            args = (w, u)
+        for _ in range(max(warmup, 1)):
+            jax.block_until_ready(fn(*args))
+        times = []
+        for _ in range(max(iters, 1)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times) * 1e6)
+    except Exception:
+        return None
+
+
+class Tuner:
+    """Workload -> (method, W) resolver with a persistent winner cache."""
+
+    def __init__(
+        self,
+        cache: Optional[TuningCache] = None,
+        mode: Optional[str] = None,
+        backend: Optional[str] = None,
+    ):
+        self.cache = cache if cache is not None else TuningCache()
+        self._mode = mode
+        self._backend = backend
+
+    @property
+    def mode(self) -> str:
+        return self._mode or _mode_from_env()
+
+    @property
+    def backend(self) -> str:
+        if self._backend is None:
+            import jax
+
+            self._backend = jax.default_backend()
+        return self._backend
+
+    # -- the entry point behind method="auto" -----------------------------
+
+    def resolve(
+        self,
+        B: int,
+        K: int,
+        *,
+        draws: int = 1,
+        dtype_name: str = "float32",
+        has_key: bool = True,
+        candidates: Optional[Sequence[str]] = None,
+    ) -> Tuple[str, int]:
+        backend = self.backend
+        cands = tuple(
+            candidates
+            if candidates is not None
+            else candidate_methods(B, K, backend, has_key)
+        )
+        mode = self.mode
+        key = bucket_key(backend, B, K, draws, dtype_name, has_key=has_key)
+
+        if mode != "off":
+            hit = self.cache.get(key)
+            if hit is not None and hit["method"] in cands:
+                if not (mode == "measure" and hit.get("source") == "model"):
+                    return hit["method"], int(hit.get("W", 32))
+
+        dtype_bytes = 2 if "16" in dtype_name else 8 if "64" in dtype_name else 4
+        if mode == "measure" and not _tracing_active():
+            method, W, us = self._tune(
+                cands, B, K, draws, dtype_name, dtype_bytes, backend
+            )
+            source = "measured"
+        else:
+            method, W, us = cost_model.choose(
+                cands, B, K, draws=draws, dtype_bytes=dtype_bytes, backend=backend
+            )
+            source = "model"
+        if mode != "off":
+            self.cache.put(key, method, W, us, source=source)
+            self.cache.save_if_dirty()
+        return method, W
+
+    def _tune(self, cands, B, K, draws, dtype_name, dtype_bytes, backend):
+        """Time every candidate at the bucket's representative shape (the
+        blocked methods at a small W sweep around the model's guess); fall
+        back to the cost model if everything fails (e.g. OOM shapes)."""
+        import jax.numpy as jnp
+
+        dtype = jnp.dtype(dtype_name)
+        w_guess = cost_model.default_w(K)
+        blocked = ("fenwick", "two_level", "butterfly", "kernel")
+        best = None
+        for method in cands:
+            ws = sorted({w_guess, 32}) if method in blocked else (w_guess,)
+            for W in ws:
+                us = measure_method(method, B, K, W, dtype=dtype)
+                if us is None:
+                    continue
+                if draws > 1 and method in cost_model.CACHED_TABLE_METHODS:
+                    # measured time is build+1 draw; cross-call table reuse
+                    # (dist_key) amortizes the build — scale by the cost
+                    # model's own amortization ratio for this method
+                    kw = dict(W=W, dtype_bytes=dtype_bytes, backend=backend)
+                    full = cost_model.method_cost_eq(method, K, draws=1, **kw)
+                    amort = cost_model.method_cost_eq(
+                        method, K, draws=draws, **kw
+                    )
+                    us *= amort / full
+                if best is None or us < best[0]:
+                    best = (us, method, W)
+        if best is None:
+            method, W, us = cost_model.choose(
+                cands, B, K, draws=draws, dtype_bytes=dtype_bytes, backend=backend
+            )
+            return method, W, us
+        us, method, W = best
+        return method, W, us
+
+
+# ---------------------------------------------------------------------------
+# Process-global tuner (what sample_categorical(method="auto") consults)
+# ---------------------------------------------------------------------------
+
+_GLOBAL: Optional[Tuner] = None
+
+
+def get_tuner() -> Tuner:
+    global _GLOBAL
+    if _GLOBAL is None:
+        _GLOBAL = Tuner()
+    return _GLOBAL
+
+
+def reset_tuner() -> None:
+    """Drop the global tuner (tests point $REPRO_AUTOTUNE_CACHE elsewhere
+    and need the lazily-loaded cache re-read)."""
+    global _GLOBAL
+    _GLOBAL = None

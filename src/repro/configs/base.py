@@ -95,12 +95,16 @@ class ModelConfig:
             return self.vocab_size
         m = self.pad_vocab_multiple
         return ((self.vocab_size + m - 1) // m) * m
-    # paper technique: decode-time token sampler (two_level = the fused
-    # HBM-optimal variant, never worse than fenwick — EXPERIMENTS §Perf C3).
-    # W ~ sqrt(K) minimizes K/W + W; 128 is optimal at vocab scale
-    # (EXPERIMENTS §Perf W-sweep)
-    sampler_method: str = "two_level"
-    sampler_W: int = 128
+    # paper technique: decode-time token sampler.  "auto" defers to
+    # repro.autotune (tuning cache -> cost model) per (B, V) workload;
+    # fixed options: two_level (fused HBM-optimal variant, never worse
+    # than fenwick — EXPERIMENTS §Perf C3) | fenwick | butterfly | kernel
+    # | prefix | gumbel | alias.  sampler_W = 0 means "pick for me":
+    # the tuned W under auto, W ~ sqrt(K) (the K/W + W minimizer,
+    # capped at the vocab-scale optimum 128 — EXPERIMENTS §Perf
+    # W-sweep) for fixed methods; a nonzero value always wins.
+    sampler_method: str = "auto"
+    sampler_W: int = 0
 
     @property
     def resolved_head_dim(self) -> int:

@@ -10,6 +10,7 @@ from repro.core.butterfly import (
     closed_form_table,
     draw_butterfly,
     draw_fenwick,
+    draw_fenwick_from_table,
     draw_two_level,
     fenwick_search,
     pad_to_multiple,
@@ -20,7 +21,8 @@ from repro.core.reference import draw_linear_np, draw_prefix, prefix_sums
 __all__ = [
     "METHODS", "DEFAULT_W", "sample_categorical", "sample_from_logits",
     "build_butterfly_table", "build_fenwick_table", "butterfly_rounds",
-    "butterfly_search", "closed_form_table", "draw_butterfly", "draw_fenwick", "draw_two_level",
+    "butterfly_search", "closed_form_table", "draw_butterfly", "draw_fenwick",
+    "draw_fenwick_from_table", "draw_two_level",
     "fenwick_search", "pad_to_multiple", "draw_gumbel", "draw_gumbel_logits",
     "draw_linear_np", "draw_prefix", "prefix_sums",
 ]

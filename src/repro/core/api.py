@@ -4,12 +4,25 @@
 of a (B, K) non-negative weight matrix (unnormalized probabilities).
 
 Methods:
+  * ``auto``      — autotuned dispatch: ``repro.autotune`` picks the best
+                    strategy for (B, K, draws, dtype, backend) from its
+                    tuning cache / cost model (the default everywhere a
+                    config doesn't say otherwise)
   * ``butterfly`` — paper-faithful butterfly table + add/subtract walk
   * ``fenwick``   — TPU-adapted per-sample dyadic table (DESIGN.md §2)
+  * ``two_level`` — fused two-pass draw: (B, K/W) block sums + one gathered
+                    W-block per sample, no K-length table ever materializes
+                    (the pure-XLA twin of the Pallas kernel)
   * ``kernel``    — fused two-pass Pallas kernel (interpret-mode on CPU)
   * ``prefix``    — Alg. 1/3 full prefix sums + searchsorted (baseline)
   * ``gumbel``    — Gumbel-max one-pass baseline
   * ``alias``     — Walker/Vose alias tables (related-work baseline)
+
+Repeated distributions: pass ``dist_key="..."`` (with ``draws=`` as a
+reuse hint for ``auto``) and the alias/Fenwick tables are memoized in
+``repro.autotune``'s table cache across calls — invalidate with
+``repro.autotune.get_table_cache().invalidate(dist_key)`` when the
+underlying weights change.
 """
 
 from __future__ import annotations
@@ -24,30 +37,73 @@ from repro.core import butterfly as _bfly
 from repro.core import gumbel as _gumbel
 from repro.core import reference as _ref
 
-METHODS = ("butterfly", "fenwick", "two_level", "kernel", "prefix", "gumbel", "alias")
+METHODS = (
+    "auto", "butterfly", "fenwick", "two_level", "kernel", "prefix",
+    "gumbel", "alias",
+)
+
+
+def _resolve_auto(weights, has_key: bool, draws: int, W: Optional[int]):
+    from repro import autotune
+
+    B, K = weights.shape
+    method, tuned_W = autotune.get_tuner().resolve(
+        B, K, draws=draws, dtype_name=str(weights.dtype), has_key=has_key
+    )
+    return method, (W or tuned_W)
+
+
+def _cached_table(dist_key: str, kind: str, weights, W: Optional[int]):
+    from repro import autotune
+
+    return autotune.get_table_cache().get_or_build(dist_key, kind, weights, W)
 
 
 def sample_categorical(
     weights: jnp.ndarray,
     key: Optional[jax.Array] = None,
     u: Optional[jnp.ndarray] = None,
-    method: str = "fenwick",
-    W: int = _bfly.DEFAULT_W,
+    method: str = "auto",
+    W: Optional[int] = None,
+    draws: int = 1,
+    dist_key: Optional[str] = None,
 ) -> jnp.ndarray:
     """Draw one category index per row of ``weights``.
 
     Either ``key`` (PRNG key; uniforms are derived internally) or ``u``
     (precomputed uniforms, shape (B,)) must be given.  ``gumbel`` and
     ``alias`` require ``key``.
+
+    ``method="auto"`` resolves through ``repro.autotune`` (see module
+    docstring); ``draws`` is the expected-uses-per-distribution hint it
+    amortizes table builds over, and ``dist_key`` enables cross-call table
+    reuse for the alias/fenwick strategies.  The two go together: without
+    a ``dist_key`` nothing is reused between calls, so ``auto`` ignores
+    ``draws`` rather than select a method whose amortization would never
+    materialize.
     """
     weights = jnp.asarray(weights)
     if weights.ndim == 1:
         return sample_categorical(
-            weights[None], key=key, u=u, method=method, W=W
+            weights[None], key=key, u=u, method=method, W=W,
+            draws=draws, dist_key=dist_key,
         )[0]
     B = weights.shape[0]
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; options: {METHODS}")
+    if method == "auto":
+        eff_draws = draws if dist_key is not None else 1
+        # caller-supplied uniforms must drive the draw: with u given,
+        # resolve as key-less so auto never picks a method (gumbel/alias)
+        # that would silently ignore u
+        has_key = key is not None and u is None
+        method, W = _resolve_auto(weights, has_key, eff_draws, W)
+    if not W:
+        # falsy W always means "pick for me": W ~ sqrt(K) (the K/W + W
+        # minimizer) for fixed methods too, not a hard-coded constant
+        from repro.autotune import cost_model as _cm
+
+        W = _cm.default_w(weights.shape[1])
     if method == "gumbel":
         if key is None:
             raise ValueError("gumbel requires a PRNG key")
@@ -55,7 +111,10 @@ def sample_categorical(
     if method == "alias":
         if key is None:
             raise ValueError("alias requires a PRNG key")
-        tables = _alias.build_alias_tables(weights)
+        if dist_key is not None:
+            tables = _cached_table(dist_key, "alias", weights, W)
+        else:
+            tables = _alias.build_alias_tables(weights)
         return _alias.draw_alias_batch(tables, key)
     if u is None:
         if key is None:
@@ -71,6 +130,9 @@ def sample_categorical(
         from repro.kernels.butterfly_sample import ops as _kops
 
         return _kops.butterfly_sample(weights, u, W=W)
+    if dist_key is not None:
+        table = _cached_table(dist_key, "fenwick", weights, W)
+        return _bfly.draw_fenwick_from_table(table, u, W=W, K=weights.shape[1])
     return _bfly.draw_fenwick(weights, u, W=W)
 
 
@@ -78,17 +140,26 @@ def sample_from_logits(
     logits: jnp.ndarray,
     key: jax.Array,
     temperature: float = 1.0,
-    method: str = "fenwick",
-    W: int = _bfly.DEFAULT_W,
+    method: str = "auto",
+    W: Optional[int] = None,
 ) -> jnp.ndarray:
     """Serving-path helper: temperature sampling from (B, V) logits.
 
     Converts to stable unnormalized probabilities then draws with the
-    requested strategy (greedy for temperature == 0).
+    requested strategy (greedy for temperature == 0).  ``method="auto"``
+    resolves per (B, V) workload exactly like ``sample_categorical``
+    (always at draws=1: decode logits change every step, so there is no
+    distribution reuse to amortize).
     """
     logits = logits.astype(jnp.float32)
+    if logits.ndim == 1:
+        return sample_from_logits(
+            logits[None], key, temperature=temperature, method=method, W=W
+        )[0]
     if temperature == 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if method == "auto":
+        method, W = _resolve_auto(logits, True, 1, W)
     if method == "gumbel":
         return _gumbel.draw_gumbel_logits(logits / temperature, key)
     z = logits / temperature

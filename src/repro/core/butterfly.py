@@ -288,6 +288,20 @@ def draw_butterfly(
     return jnp.minimum(idx, K - 1)
 
 
+@functools.partial(jax.jit, static_argnames=("W", "K"))
+def draw_fenwick_from_table(
+    table: jnp.ndarray, u: jnp.ndarray, W: int, K: int
+) -> jnp.ndarray:
+    """Draw from a prebuilt Fenwick ``table`` (possibly K-padded): the
+    shared tail of ``draw_fenwick`` and the table-cache path in
+    ``repro.core.api``.  ``K`` is the unpadded category count."""
+    B = table.shape[0]
+    totals = table.reshape(B, -1, W)[:, -1, W - 1]
+    stop = totals * u.astype(table.dtype)
+    idx = fenwick_search(table, stop, W)
+    return jnp.minimum(idx, K - 1)
+
+
 @functools.partial(jax.jit, static_argnames=("W",))
 def draw_fenwick(
     weights: jnp.ndarray, u: jnp.ndarray, W: int = DEFAULT_W
@@ -295,10 +309,7 @@ def draw_fenwick(
     """Draw one index per row using the TPU-adapted Fenwick path."""
     wp, B, K = _prep(weights, W, group_pad=False)
     table = build_fenwick_table(wp, W)
-    totals = table.reshape(B, -1, W)[:, -1, W - 1]
-    stop = totals * u.astype(wp.dtype)
-    idx = fenwick_search(table, stop, W)
-    return jnp.minimum(idx, K - 1)
+    return draw_fenwick_from_table(table, u, W=W, K=K)
 
 
 @functools.partial(jax.jit, static_argnames=("W",))

@@ -3,4 +3,55 @@
 Each kernel ships as ``kernel.py`` (pl.pallas_call + explicit BlockSpec VMEM
 tiling), ``ops.py`` (jit'd public wrapper, interpret-mode fallback on CPU)
 and ``ref.py`` (pure-jnp oracle used by the allclose test sweeps).
+
+``candidates()`` is the uniform registry the autotune tuner walks: every
+kernel-backed sampling strategy, with its entry point and an availability
+predicate, so method selection never hard-codes kernel names.
 """
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCandidate:
+    """One kernel-backed strategy the tuner may select."""
+
+    method: str                     # name accepted by sample_categorical
+    module: str                     # repro.kernels.<pkg> that implements it
+    # is this candidate viable for (B, K, backend)?  Interpret-mode Pallas
+    # on CPU is an emulation (orders of magnitude slow) — never a candidate.
+    available: Callable[[int, int, str], bool]
+    description: str = ""
+
+
+_REGISTRY: Tuple[KernelCandidate, ...] = (
+    KernelCandidate(
+        method="kernel",
+        module="repro.kernels.butterfly_sample",
+        # pltpu-based: compiles natively on TPU only; every other backend
+        # (including GPU) would silently run the interpret-mode emulation
+        available=lambda B, K, backend: backend == "tpu" and K >= 2,
+        description="fused two-pass butterfly draw (block sums stay in VMEM)",
+    ),
+)
+
+
+def candidates(
+    B: int, K: int, backend: Optional[str] = None
+) -> Tuple[str, ...]:
+    """Kernel-backed method names viable for a (B, K) draw on ``backend``
+    (default: the current JAX backend)."""
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    return tuple(
+        c.method for c in _REGISTRY if c.available(B, K, backend)
+    )
+
+
+def registry() -> Tuple[KernelCandidate, ...]:
+    return _REGISTRY

@@ -33,6 +33,9 @@ import numpy as np
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 # ---------------------------------------------------------------------------
 # Pass A: per-W-block sums
@@ -57,7 +60,7 @@ def blocksums_pallas(
         in_specs=[pl.BlockSpec((tb, tk), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((tb, tk // W), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((B, K // W), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

@@ -4,7 +4,9 @@ One sweep =
   1. DRAW Z  — for every word position (m, i): build the K relative
      probabilities ``theta[m,k] * phi[w[m,i],k]`` and draw a topic.  This
      is the paper's hot loop; the sampling strategy is pluggable
-     (``butterfly`` / ``fenwick`` / ``kernel`` / ``prefix`` / ``gumbel``).
+     (``auto`` — the default, resolved per workload by ``repro.autotune``
+     — or a fixed ``butterfly`` / ``fenwick`` / ``two_level`` / ``kernel``
+     / ``lda_kernel`` / ``prefix`` / ``gumbel``).
   2. UPDATE THETA — theta[m,:] ~ Dirichlet(alpha + doc-topic counts).
   3. UPDATE PHI   — phi[:,k]  ~ Dirichlet(beta + word-topic counts).
 
@@ -46,7 +48,7 @@ def init_state(key: jax.Array, corpus: Corpus, K: int) -> LDAState:
 
 
 @functools.partial(jax.jit, static_argnames=("method", "W"))
-def _draw_z_chunk(theta_c, phi, docs_c, key, method="fenwick", W=32):
+def _draw_z_chunk(theta_c, phi, docs_c, key, method="auto", W=None):
     """Draw z for a (C, N) chunk of documents. Returns (C, N) topics."""
     C, N = docs_c.shape
     K = theta_c.shape[-1]
@@ -56,7 +58,7 @@ def _draw_z_chunk(theta_c, phi, docs_c, key, method="fenwick", W=32):
 
         u = jax.random.uniform(key, (C * N,), dtype=jnp.float32)
         theta_flat = jnp.repeat(theta_c, N, axis=0)          # (C*N, K)
-        idx = lda_draw(theta_flat, phi, docs_c.reshape(-1), u, W=W)
+        idx = lda_draw(theta_flat, phi, docs_c.reshape(-1), u, W=W or 32)
         return idx.reshape(C, N)
     # weights[c, i, k] = theta[c, k] * phi[docs[c, i], k]   (paper Alg. 1 l.8)
     weights = theta_c[:, None, :] * phi[docs_c]             # (C, N, K)
@@ -72,8 +74,8 @@ def _draw_z_chunk(theta_c, phi, docs_c, key, method="fenwick", W=32):
 def draw_z(
     state: LDAState,
     docs: jnp.ndarray,
-    method: str = "fenwick",
-    W: int = 32,
+    method: str = "auto",
+    W: int = None,
     chunk: int = 256,
 ) -> jnp.ndarray:
     """Chunked z-draw over all documents."""
@@ -122,8 +124,8 @@ def gibbs_step(
     corpus: Corpus,
     alpha: float = 0.1,
     beta: float = 0.05,
-    method: str = "fenwick",
-    W: int = 32,
+    method: str = "auto",
+    W: int = None,
     chunk: int = 256,
 ) -> LDAState:
     """One full uncollapsed Gibbs sweep."""

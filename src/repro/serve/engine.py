@@ -3,8 +3,10 @@
 Token sampling from a vocab-sized categorical per sequence is *exactly* the
 paper's setting (K = vocab, one distribution per batch row, each table used
 once) — the decode step's sampler is the paper's technique as a first-class
-serving feature (``ModelConfig.sampler_method``: fenwick | butterfly |
-kernel | prefix | gumbel).
+serving feature.  ``ModelConfig.sampler_method`` defaults to ``auto``:
+``repro.autotune`` resolves the (B, vocab) workload to a concrete strategy
+at trace time (tuning cache, then cost model); fixed choices (fenwick |
+two_level | butterfly | kernel | prefix | gumbel | alias) remain available.
 """
 
 from __future__ import annotations

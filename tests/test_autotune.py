@@ -1,0 +1,296 @@
+"""repro.autotune: cost-model shape, tuning-cache persistence, and the
+``method="auto"`` end-to-end contract (resolve -> cache hit -> restart
+survival), plus statistical agreement of auto with the prefix oracle."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import autotune
+from repro.autotune.cache import TuningCache, bucket_key
+from repro.core import sample_categorical
+
+# the chi-square harness from test_sampler_stats (same rootdir import)
+from test_sampler_stats import CHI2_999, _chi2_stat
+
+ALL_MODEL_METHODS = (
+    "prefix", "fenwick", "two_level", "butterfly", "gumbel", "alias", "kernel"
+)
+
+
+@pytest.fixture
+def fresh_autotune(tmp_path, monkeypatch):
+    """Point the global tuner at a throwaway cache file."""
+    path = str(tmp_path / "autotune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    autotune.reset()
+    yield path
+    autotune.reset()
+
+
+# ---------------------------------------------------------------------------
+# Layer 1: cost model
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ALL_MODEL_METHODS)
+@pytest.mark.parametrize("backend", ["cpu", "gpu", "tpu"])
+def test_cost_model_monotone_in_K(method, backend):
+    Ks = [16, 32, 64, 128, 256, 1024, 4096, 16384]
+    costs = [
+        autotune.predict_us(method, 1024, K, W=32, backend=backend) for K in Ks
+    ]
+    for k0, k1, c0, c1 in zip(Ks, Ks[1:], costs, costs[1:]):
+        assert c1 > c0, f"{method}/{backend}: cost fell from K={k0} to K={k1}"
+
+
+def test_cost_model_regimes():
+    """The paper-grounded regimes the model was fitted to."""
+    # tiny K: full prefix sums win over the blocked methods
+    m, _, _ = autotune.choose(("prefix", "fenwick", "two_level"), 4096, 16)
+    assert m == "prefix"
+    # vocab-scale one-shot draws: a butterfly-family method wins
+    m, _, _ = autotune.choose(ALL_MODEL_METHODS, 4096, 4096, backend="tpu")
+    assert m in ("two_level", "fenwick", "butterfly", "kernel")
+    # heavy reuse of one distribution: alias amortizes its build
+    m, _, _ = autotune.choose(ALL_MODEL_METHODS, 4096, 4096, draws=512)
+    assert m == "alias"
+    # reuse without a PRNG key: fenwick's cached table beats rebuilds
+    m, _, _ = autotune.choose(
+        ("prefix", "fenwick", "two_level"), 4096, 4096, draws=512
+    )
+    assert m == "fenwick"
+
+
+def test_default_w_powers_of_two():
+    for K in (2, 16, 200, 1024, 50_000, 10**6):
+        W = autotune.default_w(K)
+        assert 8 <= W <= 128 and (W & (W - 1)) == 0
+
+
+# ---------------------------------------------------------------------------
+# Layer 2: tuning cache round-trip + tuner behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_cache_roundtrip(tmp_path):
+    path = str(tmp_path / "cache.json")
+    c1 = TuningCache(path=path)
+    key = bucket_key("cpu", 4096, 1000, 1, "float32")
+    assert key == "cpu|B4096|K1024|d1|float32|key"  # pow2 bucketing
+    assert bucket_key("cpu", 4096, 1000, 1, "float32", has_key=False).endswith(
+        "|nokey"
+    )  # keyed winners must not shadow key-less callers
+    c1.put(key, "two_level", 32, 123.4, source="measured")
+    c1.save()
+
+    c2 = TuningCache(path=path)  # fresh object == process restart
+    hit = c2.get(key)
+    assert hit == {"method": "two_level", "W": 32, "us": 123.4,
+                   "source": "measured"}
+    # a later cost-model guess must not clobber the measured winner
+    c2.put(key, "prefix", 8, 1.0, source="model")
+    assert c2.get(key)["method"] == "two_level"
+    # corrupt files read as empty, not raised
+    with open(path, "w") as f:
+        f.write("{not json")
+    assert len(TuningCache(path=path)) == 0
+
+
+def test_cache_ingest_bench_records():
+    c = TuningCache(path="/nonexistent/never-written.json", autoload=False)
+    records = [
+        {"backend": "cpu", "B": 512, "K": 512, "method": "prefix", "us": 90.0},
+        {"backend": "cpu", "B": 512, "K": 512, "method": "two_level",
+         "W": 16, "us": 40.0},
+        {"backend": "cpu", "B": 512, "K": 512, "method": "gumbel", "us": 800.0},
+    ]
+    n = c.ingest_records({"schema": autotune.BENCH_SCHEMA, "records": records})
+    assert n == 2  # one bucket per caller kind (key / nokey)
+    for has_key in (True, False):
+        hit = c.get(bucket_key("cpu", 512, 512, 1, "float32", has_key=has_key))
+        assert hit["method"] == "two_level" and hit["W"] == 16
+    # ingesting another machine's *cache file* merges entries directly
+    c2 = TuningCache(path="/nonexistent/never.json", autoload=False)
+    n = c2.ingest_records(
+        {"schema": autotune.SCHEMA,
+         "entries": {"cpu|B8|K8|d1|float32|key": {"method": "prefix", "W": 8,
+                                                  "us": 5.0}}}
+    )
+    assert n == 1 and c2.get("cpu|B8|K8|d1|float32|key")["method"] == "prefix"
+
+
+def test_resolve_persists_and_survives_restart(fresh_autotune):
+    path = fresh_autotune
+    first = autotune.resolve(256, 1024)
+    assert os.path.exists(path), "resolve must persist the winner"
+    blob = json.load(open(path))
+    assert blob["schema"] == autotune.SCHEMA and len(blob["entries"]) == 1
+
+    # same bucket, different exact shape: in-memory cache hit, same answer
+    assert autotune.get_tuner().resolve(250, 1000) == first
+
+    # "process restart": drop all globals, reload from disk
+    autotune.reset_tuner()
+    assert autotune.resolve(256, 1024) == first
+    assert len(json.load(open(path))["entries"]) == 1
+
+
+def test_measure_mode_times_once_per_bucket(fresh_autotune, monkeypatch):
+    from repro.autotune import tuner as tuner_mod
+
+    calls = []
+    real = tuner_mod.measure_method
+
+    def counting(method, B, K, W, **kw):
+        calls.append(method)
+        return real(method, B, K, W, iters=1, warmup=1, **kw)
+
+    monkeypatch.setattr(tuner_mod, "measure_method", counting)
+    t = autotune.Tuner(mode="measure")
+    first = t.resolve(64, 128)
+    assert calls, "measure mode must actually time candidates"
+    n = len(calls)
+    assert t.resolve(64, 128) == first
+    assert len(calls) == n, "second resolve on the bucket must not re-time"
+    entry = t.cache.get(bucket_key(t.backend, 64, 128, 1, "float32"))
+    assert entry["source"] == "measured"
+
+
+# ---------------------------------------------------------------------------
+# Layer 3: table cache
+# ---------------------------------------------------------------------------
+
+
+def test_table_cache_hits_and_invalidation():
+    cache = autotune.TableCache(max_entries=4)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.uniform(0.1, 1.0, (8, 64)), jnp.float32)
+    t1 = cache.get_or_build("phi", "fenwick", w, W=8)
+    t2 = cache.get_or_build("phi", "fenwick", w, W=8)
+    assert t1 is t2 and cache.stats() == {"entries": 1, "hits": 1, "misses": 1}
+    assert cache.invalidate("phi") == 1 and len(cache) == 0
+    # inside jit (tracers) the cache must pass through, not capture tracers
+    jax.jit(lambda w: cache.get_or_build("phi", "fenwick", w, W=8))(w)
+    assert len(cache) == 0
+
+
+def test_dist_key_integer_weights_match_uncached():
+    """Regression: the cached-table path must normalize dtype like the
+    uncached one (an integer table truncates the uniforms to 0)."""
+    w = jnp.full((4, 8), 1, jnp.int32)
+    u = jnp.full((4,), 0.9, jnp.float32)
+    autotune.reset_table_cache()
+    a = np.asarray(sample_categorical(w, u=u, method="fenwick", W=8))
+    b = np.asarray(
+        sample_categorical(w, u=u, method="fenwick", W=8, dist_key="int")
+    )
+    np.testing.assert_array_equal(a, b)
+    assert (b == 7).all()
+
+
+def test_draws_hint_ignored_without_dist_key(fresh_autotune):
+    """No dist_key => no cross-call reuse => auto must not select a method
+    on the strength of amortization that never happens."""
+    w = jnp.ones((64, 4096), jnp.float32)
+    sample_categorical(w, key=jax.random.PRNGKey(0), method="auto", draws=512)
+    blob = json.load(open(fresh_autotune))
+    (key,) = blob["entries"]
+    assert "|d1|" in key, f"resolved at draws=512 despite no dist_key: {key}"
+
+
+def test_kernel_candidate_tpu_only():
+    """Interpret-mode Pallas must never be an auto candidate off-TPU."""
+    from repro import kernels
+
+    assert "kernel" not in kernels.candidates(1024, 1024, "cpu")
+    assert "kernel" not in kernels.candidates(1024, 1024, "gpu")
+    assert "kernel" in kernels.candidates(1024, 1024, "tpu")
+
+
+def test_dist_key_draws_match_uncached():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.uniform(0.1, 1.0, (32, 48)), jnp.float32)
+    u = jnp.asarray(rng.uniform(0, 1, (32,)), jnp.float32)
+    autotune.reset_table_cache()
+    a = sample_categorical(w, u=u, method="fenwick", W=8)
+    b = sample_categorical(w, u=u, method="fenwick", W=8, dist_key="w")
+    c = sample_categorical(w, u=u, method="fenwick", W=8, dist_key="w")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    assert autotune.get_table_cache().hits >= 1
+
+
+# ---------------------------------------------------------------------------
+# method="auto" end to end
+# ---------------------------------------------------------------------------
+
+
+def test_auto_statistically_matches_prefix(fresh_autotune):
+    """auto must draw from the same distribution as the prefix oracle
+    (chi-square on a skewed pmf, same gate as test_sampler_stats)."""
+    K, N = 20, 150_000
+    rng = np.random.default_rng(5)
+    probs = rng.dirichlet(np.full(K, 0.3))
+    w = jnp.tile(jnp.array(probs, jnp.float32)[None], (N, 1))
+    for method in ("auto", "prefix"):
+        idx = np.array(
+            sample_categorical(w, key=jax.random.PRNGKey(1), method=method)
+        )
+        counts = np.bincount(idx, minlength=K).astype(np.float64)
+        stat, _ = _chi2_stat(counts, probs)
+        assert stat < CHI2_999[19], f"{method}: chi2={stat:.1f}"
+
+
+def test_auto_works_without_key(fresh_autotune):
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.uniform(0.1, 1.0, (64, 200)), jnp.float32)
+    u = jnp.asarray(rng.uniform(0, 1, (64,)), jnp.float32)
+    idx = np.asarray(sample_categorical(w, u=u, method="auto"))
+    assert idx.shape == (64,) and (0 <= idx).all() and (idx < 200).all()
+
+
+def test_auto_1d_logits(fresh_autotune):
+    """Regression: 1-D logits must lift to (1, K) before auto resolution."""
+    from repro.core import sample_from_logits
+
+    idx = sample_from_logits(jnp.array([0.0, 5.0, 1.0]), jax.random.PRNGKey(0))
+    assert idx.shape == () and 0 <= int(idx) < 3
+    greedy = sample_from_logits(
+        jnp.array([0.0, 5.0, 1.0]), jax.random.PRNGKey(0), temperature=0.0
+    )
+    assert int(greedy) == 1
+
+
+def test_auto_inside_jit(fresh_autotune):
+    w = jnp.ones((128, 512), jnp.float32)
+    f = jax.jit(lambda w, k: sample_categorical(w, key=k, method="auto"))
+    idx = np.asarray(f(w, jax.random.PRNGKey(0)))
+    assert idx.shape == (128,) and (idx < 512).all()
+
+
+def test_measure_mode_never_times_during_trace(fresh_autotune, monkeypatch):
+    """Regression: a nested jit during an outer trace is staged, not run,
+    so a stopwatch there measures tracing time — measure mode must fall
+    back to the cost model inside a trace (and not persist 'measured')."""
+    from repro.autotune import tuner as tuner_mod
+
+    monkeypatch.setattr(
+        tuner_mod, "measure_method",
+        lambda *a, **k: (_ for _ in ()).throw(AssertionError("timed in trace")),
+    )
+    monkeypatch.setenv("REPRO_AUTOTUNE", "measure")
+    autotune.reset()
+    w = jnp.ones((16, 4096), jnp.float32)
+    jax.jit(lambda w, k: sample_categorical(w, key=k, method="auto"))(
+        w, jax.random.PRNGKey(0)
+    )
+    entry = autotune.get_tuner().cache.get(
+        bucket_key(autotune.get_tuner().backend, 16, 4096, 1, "float32")
+    )
+    assert entry is not None and entry["source"] == "model"
