@@ -73,6 +73,46 @@ def run(Bs=(4096,), Ks=(64, 256, 1024, 4096), W=32):
     return rows
 
 
+def run_reuse(B=4096, K=4096, W=32, draws=16):
+    """Build-once/draw-many through the distribution-object API vs. the
+    one-shot shim: the amortization the ``Categorical`` pytree exists for.
+
+    Returns rows comparing ``draws`` one-shot calls (table rebuilt every
+    time) against one ``plan().build()`` plus ``draws`` ``draw()`` calls
+    from the held distribution."""
+    from repro import sampling
+
+    rng = np.random.default_rng(0)
+    w = jnp.array(rng.uniform(0.1, 1.0, size=(B, K)).astype(np.float32))
+    keys = jax.random.split(jax.random.PRNGKey(0), draws)
+    rows = []
+    for method in ("fenwick", "two_level", "alias"):
+        p = sampling.plan((B, K), method=method, W=W, draws=draws)
+
+        def oneshot():
+            outs = [
+                sample_categorical(w, key=k, method=method, W=W) for k in keys
+            ]
+            return outs[-1]
+
+        dist = p.build(w)
+
+        def reused():
+            outs = [p.draw(dist, key=k) for k in keys]
+            return outs[-1]
+
+        t_one = _bench(oneshot, iters=3)
+        t_reuse = _bench(reused, iters=3)
+        rows.append(
+            dict(
+                B=B, K=K, method=method, draws=draws,
+                oneshot_us=t_one * 1e6, reused_us=t_reuse * 1e6,
+                speedup=t_one / t_reuse,
+            )
+        )
+    return rows
+
+
 def write_json(rows, path: str = "BENCH_sampler.json", W: int = 32) -> str:
     """Emit the rows as autotune-ingestible bench records."""
     blob = {
@@ -98,6 +138,9 @@ def main(argv=None):
                     help="where to write the autotune-ingestible records")
     ap.add_argument("--no-json", action="store_true",
                     help="CSV to stdout only, write no file")
+    ap.add_argument("--reuse", action="store_true",
+                    help="also benchmark build-once/draw-many (Categorical "
+                         "reuse) against the one-shot shim")
     args = ap.parse_args(argv)
     rows = run()
     print("name,us_per_call,derived")
@@ -107,6 +150,13 @@ def main(argv=None):
             f"draws_per_s={r['draws_per_s']:.3g};"
             f"model_bytes_per_sample={r['model_bytes_per_sample']:.0f}"
         )
+    if args.reuse:
+        for r in run_reuse():
+            print(
+                f"reuse_{r['method']}_B{r['B']}_K{r['K']}_d{r['draws']},"
+                f"{r['reused_us']:.0f},oneshot_us={r['oneshot_us']:.0f};"
+                f"speedup={r['speedup']:.2f}x"
+            )
     if not args.no_json:
         path = write_json(rows, args.json)
         print(f"# wrote {path} ({BENCH_SCHEMA}; feed to autotune_bench --import)")

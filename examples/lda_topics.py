@@ -36,10 +36,13 @@ def main():
     print(f"corpus: {corpus.num_docs} docs, {corpus.total_words} words, "
           f"V={corpus.vocab_size}, planted K={args.K}")
     state = init_state(jax.random.PRNGKey(0), corpus, args.K)
+    # per-chunk Categorical distributions, held across sweeps and refreshed
+    # each iteration from the new theta/phi (the paper's reuse pattern)
+    dists = {}
     print(f"{'iter':>5} {'perplexity':>11} {'recovery':>9} {'s/iter':>7}")
     t0 = time.perf_counter()
     for it in range(args.iters):
-        state = gibbs_step(state, corpus, method=args.method, W=32)
+        state = gibbs_step(state, corpus, method=args.method, W=32, dists=dists)
         if it % 10 == 0 or it == args.iters - 1:
             p = perplexity(state, corpus)
             r = topic_recovery_score(np.array(state.phi), corpus.true_phi)

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sampling
 from repro.core import sample_categorical
 
 B, K = 100_000, 200  # 100k samplers, 200 categories (paper's K>200 regime)
@@ -19,11 +20,29 @@ rng = np.random.default_rng(0)
 weights = jnp.array(rng.gamma(0.3, size=(B, K)).astype(np.float32))
 
 key = jax.random.PRNGKey(42)
+
+# -- the distribution-object API (primary) ---------------------------------
+# plan once (autotune resolves here, not per draw), build the pytree
+# Categorical once, draw from it as many times as you like
 for method in ("butterfly", "fenwick", "two_level", "prefix", "gumbel"):
-    idx = sample_categorical(weights, key=key, method=method, W=32)
+    p = sampling.plan(weights.shape, method=method, W=32)
+    dist = p.build(weights)              # the paper's table, built once
+    idx = p.draw(dist, key=key)
     idx.block_until_ready()
     print(f"{method:10s} -> drew {idx.shape[0]} samples, "
           f"first five: {np.asarray(idx[:5])}")
+
+# multi-draw reuses the SAME tables: 8 draws per row in one fused call,
+# uniforms derived on device (zero table rebuilds — the paper's win)
+p = sampling.plan(weights.shape, method="fenwick", W=32, draws=8)
+dist = p.build(weights)
+multi = p.draw(dist, key=key, num_samples=8)         # (8, B)
+print(f"multi-draw  -> {multi.shape} from one build "
+      f"(build_count={sampling.build_count()})")
+
+# -- the legacy one-shot shim (still supported, byte-identical) ------------
+legacy = sample_categorical(weights, key=key, method="fenwick", W=32)
+assert np.array_equal(np.asarray(legacy), np.asarray(p.draw(dist, key=key)))
 
 # sanity: empirical marginal of row 0 matches its distribution
 reps = jnp.tile(weights[:1], (50_000, 1))

@@ -31,8 +31,13 @@ def main():
 
     import dataclasses
 
+    from repro.configs.base import SamplerSpec
+
+    # the engine plans this spec once per (batch, vocab) workload and the
+    # jitted decode step draws through the compiled plan
     cfg = dataclasses.replace(
-        get_config(args.arch, smoke=True), sampler_method=args.method, sampler_W=8
+        get_config(args.arch, smoke=True),
+        sampler=SamplerSpec(method=args.method, W=8),
     )
     model = build_model(cfg)
     params = init_params(jax.random.PRNGKey(0), model.specs, jnp.float32)

@@ -43,7 +43,12 @@ from repro.autotune.cost_model import (
     predict_us,
     rank_methods,
 )
-from repro.autotune.tables import TableCache, get_table_cache, reset_table_cache
+from repro.autotune.tables import (
+    TableCache,
+    content_digest,
+    get_table_cache,
+    reset_table_cache,
+)
 from repro.autotune.tuner import (
     Tuner,
     candidate_methods,
@@ -69,15 +74,25 @@ def resolve(
 
 
 def reset() -> None:
-    """Drop all process-global autotune state (tests re-point the cache)."""
+    """Drop all process-global autotune state (tests re-point the cache).
+
+    Also drops ``repro.sampling``'s memoized plans: a plan freezes an
+    autotune resolution, so it must not outlive the tuner state it came
+    from."""
     reset_tuner()
     reset_table_cache()
+    try:
+        from repro import sampling
+
+        sampling.reset_plans()
+    except ImportError:  # sampling not imported yet: nothing to drop
+        pass
 
 
 __all__ = [
     "BACKENDS", "BENCH_SCHEMA", "SCHEMA", "BackendParams", "TableCache",
     "Tuner", "TuningCache", "bucket_key", "candidate_methods", "choose",
-    "default_cache_path", "default_w", "get_table_cache", "get_tuner",
-    "measure_method", "method_cost_eq", "predict_us", "rank_methods",
-    "reset", "reset_table_cache", "reset_tuner", "resolve",
+    "content_digest", "default_cache_path", "default_w", "get_table_cache",
+    "get_tuner", "measure_method", "method_cost_eq", "predict_us",
+    "rank_methods", "reset", "reset_table_cache", "reset_tuner", "resolve",
 ]

@@ -1,21 +1,28 @@
-"""Reusable table cache (autotune layer 3).
+"""Reusable distribution cache (autotune layer 3).
 
-Alias and Fenwick tables are pure functions of the weight matrix — when
+Alias and Fenwick state are pure functions of the weight matrix — when
 the same distributions are drawn from repeatedly (a static unigram vocab
 in decode, a fixed phi inside one LDA sweep), rebuilding them every call
-wastes the dominant O(K) term.  The cached kinds are exactly the ones
-``repro.core.api`` can draw from a prebuilt table
+wastes the dominant O(K) term.  Since the distribution-object redesign
+this module is a thin wrapper over :mod:`repro.sampling`: it memoizes
+built :class:`~repro.sampling.Categorical` pytrees (and, through the
+legacy :meth:`TableCache.get_or_build`, their raw table leaves) for the
+``dist_key=`` path of the ``sample_categorical`` shim.  The cached kinds
+are exactly the ones whose state the shim reuses across calls
 (``cost_model.CACHED_TABLE_METHODS`` stays in sync — amortized build cost
-must mean actual reuse).  :class:`TableCache` memoizes built
-tables under a *caller-provided* distribution key with explicit
-invalidation: we never fingerprint array contents (hashing device arrays
-forces a host transfer), so the caller owns the contract "same key ==>
-same weights" and calls :meth:`invalidate` when the distribution changes
-(e.g. after every phi resample).
+must mean actual reuse).
+
+Staleness: entries are keyed by a cheap **content digest** of the weights
+(shape/dtype plus two O(BK) device-side reductions — see
+:func:`content_digest`) in addition to the caller's ``dist_key``, so
+silently changed weights can never serve a stale table: a changed matrix
+digests differently and misses.  :meth:`invalidate` remains for eager
+memory release; for explicit refresh semantics prefer holding a
+``Categorical`` and calling ``dist.refreshed(new_weights)``.
 
 Entries are LRU-evicted beyond ``max_entries``.  Tracer-safe: inside a
-``jax.jit`` trace the weights are abstract, so caching is silently skipped
-(the caller gets a freshly built — traced — table).
+``jax.jit`` trace the weights are abstract (no digest exists), so caching
+is silently skipped (the caller gets a freshly built — traced — table).
 """
 
 from __future__ import annotations
@@ -24,16 +31,59 @@ import collections
 import threading
 from typing import Any, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
+
 BUILDERS = ("alias", "fenwick")
 
 
 def _is_tracer(x) -> bool:
-    import jax
-
     return isinstance(x, jax.core.Tracer)
 
 
+@jax.jit
+def _digest_reductions(w):
+    """Two exact (integer, mod 2^32) order-sensitive checksums over the
+    raw bytes of ``w``.
+
+    Working on bitcast bytes with wraparound int32 arithmetic — never on
+    float sums, where a small delta below the total's ulp (or at a zero
+    of a weighting function) would be absorbed and digest identically —
+    guarantees any single changed element changes at least one checksum.
+    The position-weighted second sum catches permutations and paired
+    swaps that preserve the plain sum."""
+    raw = jnp.asarray(w)
+    if raw.dtype == jnp.bool_:
+        raw = raw.astype(jnp.int32)
+    if not jnp.issubdtype(raw.dtype, jnp.integer):
+        bts = jax.lax.bitcast_convert_type(raw, jnp.uint8)
+    else:
+        bts = raw
+    iv = bts.astype(jnp.int32).ravel()
+    pos = jnp.arange(iv.shape[0], dtype=jnp.int32)
+    return jnp.sum(iv), jnp.sum(iv * (2 * pos + 1))
+
+
+def content_digest(weights) -> Optional[str]:
+    """Cheap content fingerprint of a weight matrix, or ``None`` for
+    tracers (inside jit nothing concrete exists to digest).
+
+    Shape/dtype plus two streaming byte-level checksums — one device pass
+    and two scalar transfers, orders cheaper than hashing the full matrix
+    host-side.  The checksums are exact integer arithmetic: a changed
+    element always changes the digest (no float-rounding blind spots);
+    only an adversarially constructed multi-element collision could slip
+    through."""
+    if _is_tracer(weights):
+        return None
+    s1, s2 = _digest_reductions(weights)
+    return (
+        f"{tuple(weights.shape)}|{weights.dtype}|{int(s1):#x}|{int(s2):#x}"
+    )
+
+
 def _build(kind: str, weights, W: Optional[int]):
+    """Legacy raw-table builder (kept for get_or_build compatibility)."""
     from repro.core import alias as _alias
     from repro.core import butterfly as _bfly
 
@@ -49,8 +99,10 @@ def _build(kind: str, weights, W: Optional[int]):
 
 
 class TableCache:
-    """LRU memo of built sampling tables, keyed by (dist_key, kind, W,
-    shape, dtype)."""
+    """LRU memo of built sampling state — raw tables (legacy
+    :meth:`get_or_build`) and :class:`Categorical` pytrees
+    (:meth:`get_or_build_dist`) — keyed by (dist_key, kind, W, content
+    digest)."""
 
     def __init__(self, max_entries: int = 16):
         self.max_entries = max_entries
@@ -61,6 +113,22 @@ class TableCache:
         self.hits = 0
         self.misses = 0
 
+    def _lookup(self, key):
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return self._entries[key]
+        return None
+
+    def _store(self, key, value):
+        with self._lock:
+            self.misses += 1
+            self._entries[key] = value
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+        return value
+
     def get_or_build(
         self,
         dist_key: str,
@@ -68,35 +136,41 @@ class TableCache:
         weights,
         W: Optional[int] = None,
     ):
-        """Return the cached table for ``dist_key`` or build and cache it.
+        """Return the cached raw table for ``dist_key`` or build and cache.
 
-        The shape/dtype of ``weights`` is part of the internal key, so a
-        stale ``dist_key`` reused at a different shape misses instead of
-        returning a wrong-shaped table — but same-shape different-*values*
-        reuse is on the caller (invalidate on change).
-        """
-        if _is_tracer(weights):
+        The weights' content digest is part of the internal key, so a
+        stale ``dist_key`` reused at a different shape — or with silently
+        changed values — misses and rebuilds instead of serving a stale
+        table."""
+        digest = content_digest(weights)
+        if digest is None:
             return _build(kind, weights, W)  # inside jit: no caching
-        key = (str(dist_key), kind, W, tuple(weights.shape), str(weights.dtype))
-        with self._lock:
-            if key in self._entries:
-                self._entries.move_to_end(key)
-                self.hits += 1
-                return self._entries[key]
-        table = _build(kind, weights, W)
-        with self._lock:
-            self.misses += 1
-            self._entries[key] = table
-            while len(self._entries) > self.max_entries:
-                self._entries.popitem(last=False)
-        return table
+        key = ("raw", str(dist_key), kind, W, digest)
+        hit = self._lookup(key)
+        if hit is not None:
+            return hit
+        return self._store(key, _build(kind, weights, W))
+
+    def get_or_build_dist(self, dist_key: str, plan, weights):
+        """Return the cached :class:`Categorical` for ``dist_key`` under
+        ``plan`` (a ``repro.sampling.SamplerPlan``), building on miss.
+
+        Same digest-keyed staleness contract as :meth:`get_or_build`."""
+        digest = content_digest(weights)
+        if digest is None:
+            return plan.build(weights)  # inside jit: no caching
+        key = ("dist", str(dist_key), plan.method, plan.W, digest)
+        hit = self._lookup(key)
+        if hit is not None:
+            return hit
+        return self._store(key, plan.build(weights))
 
     def invalidate(self, dist_key: str) -> int:
-        """Drop every entry for ``dist_key`` (all kinds/shapes); returns
+        """Drop every entry for ``dist_key`` (all kinds/digests); returns
         how many were removed."""
         dist_key = str(dist_key)
         with self._lock:
-            doomed = [k for k in self._entries if k[0] == dist_key]
+            doomed = [k for k in self._entries if k[1] == dist_key]
             for k in doomed:
                 del self._entries[k]
         return len(doomed)

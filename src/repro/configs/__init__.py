@@ -10,6 +10,7 @@ from repro.configs.base import (
     MLAConfig,
     ModelConfig,
     MoEConfig,
+    SamplerSpec,
     ShapeConfig,
     SSMConfig,
     shapes_for,

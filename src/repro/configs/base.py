@@ -13,6 +13,23 @@ from typing import Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
+class SamplerSpec:
+    """Decode-time sampler preferences, resolved once per workload shape by
+    ``repro.sampling.plan`` (which consults ``repro.autotune`` when
+    ``method="auto"``).
+
+    ``method``: auto | two_level | fenwick | butterfly | kernel | prefix |
+    gumbel | alias.  ``W = 0`` means "pick for me" (the tuned W under
+    auto, W ~ sqrt(K) for fixed methods).  ``draws`` is the
+    expected-uses-per-distribution hint autotune amortizes table builds
+    over (1 for decode: logits change every step)."""
+
+    method: str = "auto"
+    W: int = 0
+    draws: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
 class MLAConfig:
     q_lora_rank: int = 768
     kv_lora_rank: int = 256
@@ -95,16 +112,26 @@ class ModelConfig:
             return self.vocab_size
         m = self.pad_vocab_multiple
         return ((self.vocab_size + m - 1) // m) * m
-    # paper technique: decode-time token sampler.  "auto" defers to
-    # repro.autotune (tuning cache -> cost model) per (B, V) workload;
-    # fixed options: two_level (fused HBM-optimal variant, never worse
-    # than fenwick — EXPERIMENTS §Perf C3) | fenwick | butterfly | kernel
-    # | prefix | gumbel | alias.  sampler_W = 0 means "pick for me":
-    # the tuned W under auto, W ~ sqrt(K) (the K/W + W minimizer,
-    # capped at the vocab-scale optimum 128 — EXPERIMENTS §Perf
-    # W-sweep) for fixed methods; a nonzero value always wins.
+    # paper technique: decode-time token sampler.  The structured form is
+    # ``sampler`` (a SamplerSpec, resolved once per (B, V) workload by
+    # repro.sampling.plan); the loose sampler_method/sampler_W pair
+    # remains as the legacy spelling and feeds sampler_spec when
+    # ``sampler`` is unset.  Method options and W semantics: see
+    # SamplerSpec.  (two_level is the fused HBM-optimal variant, never
+    # worse than fenwick — EXPERIMENTS §Perf C3; W ~ sqrt(K) is the
+    # K/W + W minimizer, capped at the vocab-scale optimum 128 —
+    # EXPERIMENTS §Perf W-sweep.)
+    sampler: Optional[SamplerSpec] = None
     sampler_method: str = "auto"
     sampler_W: int = 0
+
+    @property
+    def sampler_spec(self) -> SamplerSpec:
+        """The effective sampler spec: ``sampler`` if set, else the legacy
+        ``sampler_method``/``sampler_W`` pair lifted into a SamplerSpec."""
+        if self.sampler is not None:
+            return self.sampler
+        return SamplerSpec(method=self.sampler_method, W=self.sampler_W)
 
     @property
     def resolved_head_dim(self) -> int:

@@ -19,6 +19,13 @@ class LDAConfig:
     sampler_method: str = "butterfly"
     sampler_W: int = 32
 
+    @property
+    def sampler_spec(self):
+        """The gibbs sweep's sampler prefs as a structured SamplerSpec."""
+        from repro.configs.base import SamplerSpec
+
+        return SamplerSpec(method=self.sampler_method, W=self.sampler_W)
+
 
 CONFIG = LDAConfig()
 SMOKE = LDAConfig(name="lda-smoke", M=96, V=120, K=8, iterations=5, sampler_W=8)

@@ -1,4 +1,9 @@
-"""Core: butterfly-patterned partial sums for categorical sampling."""
+"""Core: butterfly-patterned partial sums for categorical sampling.
+
+The strategy implementations live here; the primary user-facing API is
+:mod:`repro.sampling` (pytree ``Categorical`` + compiled ``SamplerPlan``)
+— ``sample_categorical``/``sample_from_logits`` are its one-shot shims.
+"""
 
 from repro.core.api import METHODS, sample_categorical, sample_from_logits
 from repro.core.butterfly import (

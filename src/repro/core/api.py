@@ -1,7 +1,28 @@
-"""Public sampling API: one entry point, many strategies.
+"""Legacy one-shot sampling entry points — now thin shims.
 
-``sample_categorical(weights, key=..., method=...)`` draws one index per row
-of a (B, K) non-negative weight matrix (unnormalized probabilities).
+The primary API lives in :mod:`repro.sampling`: build a pytree
+:class:`~repro.sampling.Categorical` once (``from_weights`` /
+``from_logits``) and draw from it through a compiled
+:class:`~repro.sampling.SamplerPlan` (``plan(...)`` resolves
+``repro.autotune`` once at plan time).  Migration::
+
+    # before                                   # after
+    sample_categorical(w, key=k,               p = sampling.plan(w.shape)
+                       method="auto")          idx = p.sample(w, key=k)
+
+    sample_categorical(w, u=u,                 p = sampling.plan(w.shape,
+                       method="fenwick",                         method="fenwick", W=32)
+                       W=32, dist_key="phi")   dist = p.build(w)      # hold it
+                                               idx = p.draw(dist, u=u)
+                                               dist = dist.refreshed(w2)  # w changed
+
+    sample_from_logits(logits, k,              p = sampling.plan(logits.shape)
+                       temperature=t)          tok = p.sample_logits(logits, k, temperature=t)
+
+``sample_categorical(weights, key=..., method=...)`` remains supported
+unchanged — it builds a throwaway ``Categorical`` + plan per call and is
+byte-identical to the pre-redesign implementation for fixed
+``(method, W, u)`` inputs.
 
 Methods:
   * ``auto``      — autotuned dispatch: ``repro.autotune`` picks the best
@@ -19,10 +40,11 @@ Methods:
   * ``alias``     — Walker/Vose alias tables (related-work baseline)
 
 Repeated distributions: pass ``dist_key="..."`` (with ``draws=`` as a
-reuse hint for ``auto``) and the alias/Fenwick tables are memoized in
-``repro.autotune``'s table cache across calls — invalidate with
-``repro.autotune.get_table_cache().invalidate(dist_key)`` when the
-underlying weights change.
+reuse hint for ``auto``) and the alias/Fenwick state is memoized in
+``repro.autotune``'s table cache across calls.  The cache keys on a cheap
+content digest of the weights, so silently changed weights rebuild
+instead of serving a stale table; prefer holding a ``Categorical`` and
+calling ``dist.refreshed(new_weights)`` explicitly.
 """
 
 from __future__ import annotations
@@ -32,31 +54,15 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import alias as _alias
-from repro.core import butterfly as _bfly
-from repro.core import gumbel as _gumbel
-from repro.core import reference as _ref
-
 METHODS = (
     "auto", "butterfly", "fenwick", "two_level", "kernel", "prefix",
     "gumbel", "alias",
 )
 
-
-def _resolve_auto(weights, has_key: bool, draws: int, W: Optional[int]):
-    from repro import autotune
-
-    B, K = weights.shape
-    method, tuned_W = autotune.get_tuner().resolve(
-        B, K, draws=draws, dtype_name=str(weights.dtype), has_key=has_key
-    )
-    return method, (W or tuned_W)
-
-
-def _cached_table(dist_key: str, kind: str, weights, W: Optional[int]):
-    from repro import autotune
-
-    return autotune.get_table_cache().get_or_build(dist_key, kind, weights, W)
+# the variants whose built state the table cache memoizes under dist_key
+# (stays in sync with autotune.cost_model.CACHED_TABLE_METHODS: amortized
+# build cost must mean actual cross-call reuse)
+_CACHED_KINDS = ("alias", "fenwick")
 
 
 def sample_categorical(
@@ -74,7 +80,7 @@ def sample_categorical(
     (precomputed uniforms, shape (B,)) must be given.  ``gumbel`` and
     ``alias`` require ``key``.
 
-    ``method="auto"`` resolves through ``repro.autotune`` (see module
+    ``method="auto"`` resolves through ``repro.sampling.plan`` (see module
     docstring); ``draws`` is the expected-uses-per-distribution hint it
     amortizes table builds over, and ``dist_key`` enables cross-call table
     reuse for the alias/fenwick strategies.  The two go together: without
@@ -82,58 +88,44 @@ def sample_categorical(
     ``draws`` rather than select a method whose amortization would never
     materialize.
     """
+    from repro import sampling
+
     weights = jnp.asarray(weights)
     if weights.ndim == 1:
         return sample_categorical(
             weights[None], key=key, u=u, method=method, W=W,
             draws=draws, dist_key=dist_key,
         )[0]
-    B = weights.shape[0]
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; options: {METHODS}")
-    if method == "auto":
-        eff_draws = draws if dist_key is not None else 1
-        # caller-supplied uniforms must drive the draw: with u given,
-        # resolve as key-less so auto never picks a method (gumbel/alias)
-        # that would silently ignore u
-        has_key = key is not None and u is None
-        method, W = _resolve_auto(weights, has_key, eff_draws, W)
-    if not W:
-        # falsy W always means "pick for me": W ~ sqrt(K) (the K/W + W
-        # minimizer) for fixed methods too, not a hard-coded constant
-        from repro.autotune import cost_model as _cm
+    eff_draws = draws if dist_key is not None else 1
+    # caller-supplied uniforms must drive the draw: with u given, resolve
+    # as key-less so auto never picks a method (gumbel/alias) that would
+    # silently ignore u
+    has_key = key is not None and u is None
+    p = sampling.plan(
+        weights.shape,
+        method=method,
+        W=W,
+        dtype=str(weights.dtype),
+        draws=eff_draws,
+        has_key=has_key,
+    )
+    if p.method in ("gumbel", "alias") and key is None:
+        raise ValueError(f"{p.method} requires a PRNG key")
+    if u is None and key is None:
+        raise ValueError("need key or u")
+    if dist_key is not None and p.method in _CACHED_KINDS:
+        from repro import autotune
 
-        W = _cm.default_w(weights.shape[1])
-    if method == "gumbel":
-        if key is None:
-            raise ValueError("gumbel requires a PRNG key")
-        return _gumbel.draw_gumbel(weights, key)
-    if method == "alias":
-        if key is None:
-            raise ValueError("alias requires a PRNG key")
-        if dist_key is not None:
-            tables = _cached_table(dist_key, "alias", weights, W)
-        else:
-            tables = _alias.build_alias_tables(weights)
-        return _alias.draw_alias_batch(tables, key)
-    if u is None:
-        if key is None:
-            raise ValueError("need key or u")
-        u = jax.random.uniform(key, (B,), dtype=jnp.float32)
-    if method == "prefix":
-        return _ref.draw_prefix(weights, u)
-    if method == "butterfly":
-        return _bfly.draw_butterfly(weights, u, W=W)
-    if method == "two_level":
-        return _bfly.draw_two_level(weights, u, W=W)
-    if method == "kernel":
-        from repro.kernels.butterfly_sample import ops as _kops
-
-        return _kops.butterfly_sample(weights, u, W=W)
-    if dist_key is not None:
-        table = _cached_table(dist_key, "fenwick", weights, W)
-        return _bfly.draw_fenwick_from_table(table, u, W=W, K=weights.shape[1])
-    return _bfly.draw_fenwick(weights, u, W=W)
+        dist = autotune.get_table_cache().get_or_build_dist(dist_key, p, weights)
+    else:
+        dist = p.build(weights)
+    if p.method in ("gumbel", "alias"):
+        # key-driven variants consume PRNG state even when u was (also)
+        # supplied — matching the pre-redesign dispatch order
+        return p.draw(dist, key=key)
+    return p.draw(dist, key=key, u=u)
 
 
 def sample_from_logits(
@@ -150,19 +142,28 @@ def sample_from_logits(
     resolves per (B, V) workload exactly like ``sample_categorical``
     (always at draws=1: decode logits change every step, so there is no
     distribution reuse to amortize).
+
+    Float logits keep their dtype through the softmax — ``bfloat16``
+    logits are NOT upcast, halving the softmax's HBM traffic, and the
+    autotune cost model sees the real dtype.
     """
-    logits = logits.astype(jnp.float32)
+    from repro import sampling
+
+    logits = jnp.asarray(logits)
+    if not jnp.issubdtype(logits.dtype, jnp.floating):
+        logits = logits.astype(jnp.float32)
     if logits.ndim == 1:
         return sample_from_logits(
             logits[None], key, temperature=temperature, method=method, W=W
         )[0]
     if temperature == 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    if method == "auto":
-        method, W = _resolve_auto(logits, True, 1, W)
-    if method == "gumbel":
-        return _gumbel.draw_gumbel_logits(logits / temperature, key)
-    z = logits / temperature
-    z = z - jnp.max(z, axis=-1, keepdims=True)
-    weights = jnp.exp(z)
-    return sample_categorical(weights, key=key, method=method, W=W)
+    p = sampling.plan(
+        logits.shape,
+        method=method,
+        W=W,
+        dtype=str(logits.dtype),
+        draws=1,
+        has_key=True,
+    )
+    return p.sample_logits(logits, key, temperature=temperature)

@@ -1,3 +1,7 @@
-from repro.kernels.butterfly_sample.ops import butterfly_sample
+from repro.kernels.butterfly_sample.ops import (
+    build_block_sums,
+    butterfly_sample,
+    butterfly_sample_from_sums,
+)
 
-__all__ = ["butterfly_sample"]
+__all__ = ["build_block_sums", "butterfly_sample", "butterfly_sample_from_sums"]

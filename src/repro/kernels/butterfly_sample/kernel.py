@@ -127,8 +127,73 @@ def search_pallas(
 
 
 # ---------------------------------------------------------------------------
-# Fused end-to-end draw
+# Table-in/table-out halves + fused end-to-end draw
 # ---------------------------------------------------------------------------
+
+
+def _build_sums_impl(weights, W: int, tb: int, tk: int, interpret: bool):
+    """Pass A as a table-out step: pad, blocksum, running-sum.
+
+    Returns ``(wp, running)`` — the padded weights (pass B re-reads the
+    selected W-block from them) and the (Bp, Kp//W) running block sums.
+    This pair IS the kernel strategy's reusable precomputed state (the
+    analogue of the fenwick/butterfly tables for the other variants).
+    """
+    B, K = weights.shape
+    tk = max(W, min(tk, int(np.ceil(K / W)) * W))
+    if tk % W:
+        raise ValueError(f"tk={tk} must be a multiple of W={W}")
+    padB = (-B) % tb
+    padK = (-K) % tk
+    wp = jnp.pad(weights, ((0, padB), (0, padK)))
+    bs = blocksums_pallas(wp, W, tb, tk, interpret=interpret)   # (Bp, Kp//W)
+    running = jnp.cumsum(bs, axis=1)
+    return wp, running
+
+
+def _draw_from_sums_impl(wp, running, u, B: int, K: int, W: int, interpret: bool):
+    """Pass B as a table-in step: block-level search on ``running`` then the
+    scalar-prefetch in-block walk over ``wp``.  ``B``/``K`` are the unpadded
+    shape (``u`` has length B)."""
+    Bp, Kp = wp.shape
+    up = jnp.pad(u.astype(jnp.float32), (0, Bp - B))
+    totals = running[:, -1]
+    stop = totals * up
+    nb = Kp // W
+    jb = jnp.clip(jnp.sum(running <= stop[:, None], axis=1), 0, nb - 1)
+    lo = jnp.where(
+        jb > 0,
+        jnp.take_along_axis(running, jnp.maximum(jb - 1, 0)[:, None], axis=1)[:, 0],
+        jnp.zeros_like(stop),
+    )
+    idx = search_pallas(wp, jb, stop, lo, W, interpret=interpret)
+    return jnp.minimum(idx[:B], K - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("W", "tb", "tk", "interpret"))
+def build_block_sums_pallas(
+    weights: jnp.ndarray,
+    W: int = 32,
+    tb: int = 8,
+    tk: int = 512,
+    interpret: bool = True,
+):
+    """Jitted table-out entry point: (B, K) weights -> (wp, running)."""
+    return _build_sums_impl(weights, W, tb, tk, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("B", "K", "W", "interpret"))
+def sample_from_block_sums_pallas(
+    wp: jnp.ndarray,
+    running: jnp.ndarray,
+    u: jnp.ndarray,
+    B: int,
+    K: int,
+    W: int = 32,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Jitted table-in entry point: draw from prebuilt (wp, running)."""
+    return _draw_from_sums_impl(wp, running, u, B, K, W, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("W", "tb", "tk", "interpret"))
@@ -147,25 +212,5 @@ def butterfly_sample_pallas(
     (tk % W == 0); pass B touches one (1, W) tile per sample.
     """
     B, K = weights.shape
-    tk = max(W, min(tk, int(np.ceil(K / W)) * W))
-    if tk % W:
-        raise ValueError(f"tk={tk} must be a multiple of W={W}")
-    padB = (-B) % tb
-    padK = (-K) % tk
-    wp = jnp.pad(weights, ((0, padB), (0, padK)))
-    up = jnp.pad(u.astype(jnp.float32), (0, padB))
-    Bp, Kp = wp.shape
-
-    bs = blocksums_pallas(wp, W, tb, tk, interpret=interpret)   # (Bp, Kp//W)
-    running = jnp.cumsum(bs, axis=1)
-    totals = running[:, -1]
-    stop = totals * up
-    nb = Kp // W
-    jb = jnp.clip(jnp.sum(running <= stop[:, None], axis=1), 0, nb - 1)
-    lo = jnp.where(
-        jb > 0,
-        jnp.take_along_axis(running, jnp.maximum(jb - 1, 0)[:, None], axis=1)[:, 0],
-        jnp.zeros_like(stop),
-    )
-    idx = search_pallas(wp, jb, stop, lo, W, interpret=interpret)
-    return jnp.minimum(idx[:B], K - 1)
+    wp, running = _build_sums_impl(weights, W, tb, tk, interpret)
+    return _draw_from_sums_impl(wp, running, u, B, K, W, interpret)

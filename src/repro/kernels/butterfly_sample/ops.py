@@ -1,10 +1,27 @@
-"""Public wrapper for the fused butterfly_sample Pallas kernel."""
+"""Public wrappers for the fused butterfly_sample Pallas kernel.
+
+Three entry points:
+
+* ``butterfly_sample``            — the fused end-to-end draw (pass A + B)
+* ``build_block_sums``            — table-out: pass A only, returns the
+                                    (padded weights, running block sums)
+                                    pair that IS the kernel strategy's
+                                    reusable state
+* ``butterfly_sample_from_sums``  — table-in: pass B only, draws from a
+                                    prebuilt pair (what a ``kernel``-variant
+                                    ``repro.sampling.Categorical`` carries
+                                    as pytree leaves)
+"""
 
 from __future__ import annotations
 
 import jax
 
-from repro.kernels.butterfly_sample.kernel import butterfly_sample_pallas
+from repro.kernels.butterfly_sample.kernel import (
+    build_block_sums_pallas,
+    butterfly_sample_pallas,
+    sample_from_block_sums_pallas,
+)
 
 
 def _default_interpret() -> bool:
@@ -27,3 +44,41 @@ def butterfly_sample(
     if interpret is None:
         interpret = _default_interpret()
     return butterfly_sample_pallas(weights, u, W=W, tb=tb, tk=tk, interpret=interpret)
+
+
+def build_block_sums(
+    weights,
+    W: int = 32,
+    tb: int = 8,
+    tk: int = 512,
+    interpret: bool | None = None,
+):
+    """Pass A alone: (B, K) weights -> (padded weights, running block sums).
+
+    The returned pair can be drawn from many times via
+    ``butterfly_sample_from_sums`` without re-reading the full weight
+    matrix through pass A.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    return build_block_sums_pallas(weights, W=W, tb=tb, tk=tk, interpret=interpret)
+
+
+def butterfly_sample_from_sums(
+    wp,
+    running,
+    u,
+    K: int,
+    W: int = 32,
+    interpret: bool | None = None,
+):
+    """Pass B alone: draw from prebuilt ``(wp, running)`` state.
+
+    ``u`` is the unpadded (B,) uniform vector; ``K`` the unpadded category
+    count (both smaller than the padded state shapes).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    return sample_from_block_sums_pallas(
+        wp, running, u, B=u.shape[0], K=K, W=W, interpret=interpret
+    )

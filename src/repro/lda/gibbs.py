@@ -10,7 +10,19 @@ One sweep =
   2. UPDATE THETA — theta[m,:] ~ Dirichlet(alpha + doc-topic counts).
   3. UPDATE PHI   — phi[:,k]  ~ Dirichlet(beta + word-topic counts).
 
-All three phases are jitted; the z-draw chunks over documents so the
+Sampling goes through the distribution-object API: ``draw_z`` plans the
+(chunk*maxN, K) workload once (``repro.sampling.plan`` memoizes, so the
+autotune resolution and compiled draw are shared across every sweep) and
+holds one built ``Categorical`` per document chunk — the paper's exact
+build-the-table-then-search pattern.  Because theta/phi are resampled
+every sweep the per-chunk distributions are *refreshed*
+(``dist.refreshed(new_weights)``) rather than rebuilt from scratch
+through a fresh dispatch: same variant, same W, same compiled search,
+new table leaves.  Pass a dict as ``dists=`` to keep the built
+distributions across sweeps (``gibbs_step(..., dists=cache)``); the last
+sweep's tables then remain available for posterior draws.
+
+All phases are jitted; the z-draw chunks over documents so the
 (chunk, maxN, K) weight tensor stays within memory at any corpus scale.
 For the multi-host layout, documents shard over the ``data`` mesh axis and
 the word-topic count matrix is combined with a psum (see
@@ -20,12 +32,12 @@ the word-topic count matrix is combined with a psum (see
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import sample_categorical
+from repro import sampling
 from repro.lda.corpus import Corpus
 
 
@@ -47,28 +59,58 @@ def init_state(key: jax.Array, corpus: Corpus, K: int) -> LDAState:
     return LDAState(theta=theta, phi=phi, z=z, key=k4, step=jnp.int32(0))
 
 
-@functools.partial(jax.jit, static_argnames=("method", "W"))
-def _draw_z_chunk(theta_c, phi, docs_c, key, method="auto", W=None):
-    """Draw z for a (C, N) chunk of documents. Returns (C, N) topics."""
+@jax.jit
+def _chunk_weights(theta_c, phi, docs_c):
+    """weights[c, i, k] = theta[c, k] * phi[docs[c, i], k]  (paper Alg. 1 l.8)."""
+    return theta_c[:, None, :] * phi[docs_c]                # (C, N, K)
+
+
+@functools.partial(jax.jit, static_argnames=("W",))
+def _lda_kernel_chunk(theta_c, phi, docs_c, key, W: int):
+    """Fused Pallas kernel path: the (C*N, K) weights never materialize."""
+    from repro.kernels.lda_draw import lda_draw
+
+    C, N = docs_c.shape
+    u = jax.random.uniform(key, (C * N,), dtype=jnp.float32)
+    theta_flat = jnp.repeat(theta_c, N, axis=0)              # (C*N, K)
+    idx = lda_draw(theta_flat, phi, docs_c.reshape(-1), u, W=W)
+    return idx.reshape(C, N)
+
+
+def _draw_z_chunk(
+    theta_c, phi, docs_c, key, method="auto", W=None,
+    dist: Optional[sampling.Categorical] = None,
+):
+    """Draw z for a (C, N) chunk of documents. Returns ((C, N) topics, dist).
+
+    Builds (or refreshes) the chunk's ``Categorical`` from this sweep's
+    theta/phi products and draws through the memoized plan's compiled
+    path.  ``dist`` is the chunk's distribution from the previous sweep,
+    if the caller held one."""
     C, N = docs_c.shape
     K = theta_c.shape[-1]
     if method == "lda_kernel":
-        # fused Pallas kernel: the (C*N, K) weights never materialize
-        from repro.kernels.lda_draw import lda_draw
-
-        u = jax.random.uniform(key, (C * N,), dtype=jnp.float32)
-        theta_flat = jnp.repeat(theta_c, N, axis=0)          # (C*N, K)
-        idx = lda_draw(theta_flat, phi, docs_c.reshape(-1), u, W=W or 32)
-        return idx.reshape(C, N)
-    # weights[c, i, k] = theta[c, k] * phi[docs[c, i], k]   (paper Alg. 1 l.8)
-    weights = theta_c[:, None, :] * phi[docs_c]             # (C, N, K)
-    flat = weights.reshape(C * N, K)
-    u = jax.random.uniform(key, (C * N,), dtype=jnp.float32)
-    if method == "gumbel":
-        idx = sample_categorical(flat, key=key, method="gumbel")
+        return _lda_kernel_chunk(theta_c, phi, docs_c, key, W=W or 32), None
+    flat = _chunk_weights(theta_c, phi, docs_c).reshape(C * N, K)
+    # gumbel consumes the PRNG key directly; every other strategy draws
+    # from key-derived uniforms, so auto resolves over the u-capable set
+    has_key = method in ("gumbel", "alias")
+    p = sampling.plan(
+        flat.shape, method=method, W=W, dtype=str(flat.dtype), has_key=has_key
+    )
+    if (
+        dist is not None
+        and dist.method == p.method
+        and dist.W == p.W
+        and dist.shape == tuple(flat.shape)
+    ):
+        dist = dist.refreshed(flat)
     else:
-        idx = sample_categorical(flat, u=u, method=method, W=W)
-    return idx.reshape(C, N)
+        # no reusable dist (first sweep, or the chunking/method changed
+        # under a held dists cache): build fresh rather than refresh
+        dist = p.build(flat)
+    idx = p.draw(dist, key=key)
+    return idx.reshape(C, N), dist
 
 
 def draw_z(
@@ -77,23 +119,31 @@ def draw_z(
     method: str = "auto",
     W: int = None,
     chunk: int = 256,
+    dists: Optional[Dict[int, sampling.Categorical]] = None,
 ) -> jnp.ndarray:
-    """Chunked z-draw over all documents."""
+    """Chunked z-draw over all documents.
+
+    ``dists``: optional mutable mapping chunk-start -> ``Categorical``.
+    When provided, each chunk's built distribution is kept there across
+    sweeps and refreshed in place (the paper's reuse pattern); when
+    ``None`` the distributions are ephemeral."""
     M, maxN = docs.shape
     keys = jax.random.split(state.key, (M + chunk - 1) // chunk + 1)
     outs = []
     for ci, start in enumerate(range(0, M, chunk)):
         end = min(start + chunk, M)
-        outs.append(
-            _draw_z_chunk(
-                state.theta[start:end],
-                state.phi,
-                docs[start:end],
-                keys[ci],
-                method=method,
-                W=W,
-            )
+        idx, dist = _draw_z_chunk(
+            state.theta[start:end],
+            state.phi,
+            docs[start:end],
+            keys[ci],
+            method=method,
+            W=W,
+            dist=None if dists is None else dists.get(start),
         )
+        if dists is not None and dist is not None:
+            dists[start] = dist
+        outs.append(idx)
     return jnp.concatenate(outs, axis=0)
 
 
@@ -127,13 +177,18 @@ def gibbs_step(
     method: str = "auto",
     W: int = None,
     chunk: int = 256,
+    dists: Optional[Dict[int, sampling.Categorical]] = None,
 ) -> LDAState:
-    """One full uncollapsed Gibbs sweep."""
+    """One full uncollapsed Gibbs sweep.
+
+    Pass the same dict as ``dists=`` on every call to hold the per-chunk
+    ``Categorical`` distributions across sweeps (refreshed each sweep
+    from the new theta/phi)."""
     docs = jnp.asarray(corpus.docs)
     mask = jnp.asarray(corpus.mask)
     K = state.theta.shape[-1]
     V = state.phi.shape[0]
-    z = draw_z(state, docs, method=method, W=W, chunk=chunk)
+    z = draw_z(state, docs, method=method, W=W, chunk=chunk, dists=dists)
     doc_topic, word_topic = _counts(z, docs, mask, K, V)
     k_theta, k_phi, k_next = jax.random.split(state.key, 3)
     theta = _update_theta(k_theta, doc_topic, alpha)

@@ -1,0 +1,56 @@
+"""Distribution-object sampling API — the primary way to draw.
+
+The paper's central artifact is a *reusable table* built once from a
+weight matrix and searched per draw.  This package gives that artifact a
+first-class API:
+
+* :class:`Categorical` — a registered pytree distribution whose leaves
+  are the precomputed draw state (butterfly/Fenwick tables, two-level
+  block sums, alias arrays, prefix sums).  Build it with
+  ``Categorical.from_weights`` / ``Categorical.from_logits``, pass it
+  through ``jit``/``vmap``/shardings freely, refresh it with
+  ``dist.refreshed(new_weights)`` when the weights change.
+* :class:`SamplerPlan` — the compiled side, from :func:`plan`, which
+  resolves ``repro.autotune`` once at plan time and exposes jitted
+  ``build`` / ``draw`` / ``sample`` / ``sample_logits``.
+
+``repro.core.sample_categorical`` / ``sample_from_logits`` remain as
+compatibility shims over this package (byte-identical draws for fixed
+``(method, W, u)``); new code should plan once and draw many::
+
+    from repro import sampling
+
+    p = sampling.plan(weights.shape, method="auto", draws=16)
+    dist = p.build(weights)                  # tables built exactly once
+    idx = p.draw(dist, key=key, num_samples=16)   # (16, B) draws
+"""
+
+from repro.sampling.distribution import (
+    KEY_VARIANTS,
+    U_VARIANTS,
+    VARIANTS,
+    Categorical,
+    build_count,
+    draw,
+    logits_to_weights,
+)
+from repro.sampling.plan import (
+    SamplerPlan,
+    plan,
+    plan_stats,
+    reset_plans,
+)
+
+__all__ = [
+    "Categorical",
+    "KEY_VARIANTS",
+    "SamplerPlan",
+    "U_VARIANTS",
+    "VARIANTS",
+    "build_count",
+    "draw",
+    "logits_to_weights",
+    "plan",
+    "plan_stats",
+    "reset_plans",
+]

@@ -1,0 +1,229 @@
+"""``SamplerPlan`` — the compiled side of the distribution-object API.
+
+``plan(spec_or_shape, method="auto", ...)`` resolves ``repro.autotune``
+**once at plan time** — never per draw call — and returns a hashable,
+frozen :class:`SamplerPlan` whose ``build``/``draw``/``sample`` methods
+route through the jitted kernels in :mod:`repro.sampling.distribution`.
+Plans are memoized per (shape, dtype, requested method/W, draws, has_key,
+backend): re-planning the same workload is a dictionary hit, and the
+autotune resolve counter (:func:`plan_stats`) proves the resolution count
+stays at one per distinct workload.
+
+Typical serving wiring (what ``repro.serve.engine`` does)::
+
+    p = sampling.plan((batch, vocab), method=spec.method, W=spec.W)
+    # ... inside the jitted decode step:
+    next_token = p.sample_logits(logits, key, temperature=0.8)
+
+Typical reuse wiring (the paper's build-once/draw-many pattern)::
+
+    p = sampling.plan(weights.shape, method="fenwick", draws=64)
+    dist = p.build(weights)           # tables built exactly once
+    for step in range(64):
+        idx = p.draw(dist, key=keys[step])
+    dist = dist.refreshed(new_weights)  # weights changed -> explicit rebuild
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.sampling import distribution as _dist
+from repro.sampling.distribution import Categorical, KEY_VARIANTS
+
+# resolved-plan memo + counters.  "autotune_resolves" counts actual
+# tuner consultations; "plan_hits" counts memoized returns.
+_PLAN_CACHE: Dict[Tuple, "SamplerPlan"] = {}
+_PLAN_LOCK = threading.Lock()
+_STATS = {"autotune_resolves": 0, "plan_hits": 0, "plan_misses": 0}
+
+
+def plan_stats() -> dict:
+    with _PLAN_LOCK:
+        return dict(_STATS)
+
+
+def reset_plans() -> None:
+    """Drop memoized plans and zero the counters (test isolation)."""
+    with _PLAN_LOCK:
+        _PLAN_CACHE.clear()
+        for k in _STATS:
+            _STATS[k] = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerPlan:
+    """A resolved (method, W) sampling strategy for one (B, K) workload.
+
+    Frozen and hashable — safe to memoize, close over in jitted functions,
+    and compare.  ``method`` is always concrete here ("auto" resolved at
+    plan time)."""
+
+    method: str
+    W: int
+    shape: Tuple[int, int]
+    dtype: str
+    draws: int
+    has_key: bool
+    backend: str
+
+    # -- building ----------------------------------------------------------
+
+    def build(self, weights) -> Categorical:
+        """Build the plan's :class:`Categorical` from (B, K) weights."""
+        weights = jnp.asarray(weights)
+        if tuple(weights.shape) != self.shape:
+            raise ValueError(
+                f"plan was made for shape {self.shape}, got {weights.shape}"
+            )
+        return Categorical._build(weights, self.method, self.W)
+
+    def build_from_logits(self, logits, temperature: float = 1.0) -> Categorical:
+        return self.build(_dist.logits_to_weights(logits, temperature))
+
+    # -- drawing -----------------------------------------------------------
+
+    def draw(
+        self,
+        dist: Categorical,
+        key: Optional[jax.Array] = None,
+        u: Optional[jnp.ndarray] = None,
+        num_samples: int = 1,
+    ) -> jnp.ndarray:
+        """Draw from a built distribution (see :func:`sampling.draw`)."""
+        return _dist.draw(dist, key=key, u=u, num_samples=num_samples)
+
+    def sample(
+        self,
+        weights,
+        key: Optional[jax.Array] = None,
+        u: Optional[jnp.ndarray] = None,
+        num_samples: int = 1,
+    ) -> jnp.ndarray:
+        """Build a throwaway distribution and draw — the one-shot path."""
+        return self.draw(self.build(weights), key=key, u=u, num_samples=num_samples)
+
+    def sample_logits(
+        self,
+        logits,
+        key: jax.Array,
+        temperature: float = 1.0,
+        num_samples: int = 1,
+    ) -> jnp.ndarray:
+        """Temperature sampling from (B, V) logits (the serving hot path).
+
+        ``temperature == 0`` short-circuits to argmax.  A plan resolved to
+        ``gumbel`` samples directly in logit space (no exp/log round-trip),
+        matching the legacy ``sample_from_logits`` numerics exactly."""
+        logits = jnp.asarray(logits)
+        if temperature == 0.0:
+            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            if num_samples == 1:
+                return greedy
+            return jnp.broadcast_to(greedy, (num_samples,) + greedy.shape)
+        if self.method == "gumbel":
+            from repro.core import gumbel as _gumbel
+
+            if num_samples == 1:
+                return _gumbel.draw_gumbel_logits(logits / temperature, key)
+            keys = jax.random.split(key, num_samples)
+            return jax.vmap(
+                lambda k: _gumbel.draw_gumbel_logits(logits / temperature, k)
+            )(keys)
+        weights = _dist.logits_to_weights(logits, temperature)
+        return self.sample(weights, key=key, num_samples=num_samples)
+
+
+def _normalize_shape(spec_or_shape, shape) -> Tuple[int, int]:
+    if hasattr(spec_or_shape, "shape") and not isinstance(spec_or_shape, tuple):
+        spec_or_shape = spec_or_shape.shape
+    if isinstance(spec_or_shape, (tuple, list)) and len(spec_or_shape) == 2:
+        return (int(spec_or_shape[0]), int(spec_or_shape[1]))
+    if shape is not None and len(shape) == 2:
+        return (int(shape[0]), int(shape[1]))
+    raise ValueError(
+        "plan() needs a (B, K) workload shape: pass a 2-tuple, an array, "
+        "or a SamplerSpec together with shape=(B, K)"
+    )
+
+
+def plan(
+    spec_or_shape,
+    method: Optional[str] = None,
+    *,
+    shape: Optional[Tuple[int, int]] = None,
+    W: Optional[int] = None,
+    dtype: Union[str, jnp.dtype] = "float32",
+    draws: int = 1,
+    has_key: bool = True,
+    backend: Optional[str] = None,
+) -> SamplerPlan:
+    """Resolve a sampling strategy for a workload, once.
+
+    ``spec_or_shape`` is a (B, K) tuple, an array (shape and dtype are
+    taken from it), or a ``repro.configs.base.SamplerSpec`` (method/W/draws
+    are taken from it; pass the workload via ``shape=``).
+
+    ``method="auto"`` (the default) consults ``repro.autotune`` — tuning
+    cache first, cost model on a miss — exactly once per distinct
+    (shape, dtype, draws, has_key, backend): results are memoized
+    process-wide, and draw calls made through the returned plan never
+    re-resolve.  ``W`` falsy means "pick for me" (tuned W under auto,
+    W ~ sqrt(K) otherwise).
+    """
+    # unpack a SamplerSpec-shaped object (duck-typed: configs may not be
+    # importable in every context this runs)
+    if hasattr(spec_or_shape, "method") and hasattr(spec_or_shape, "W"):
+        spec = spec_or_shape
+        method = method if method not in (None, "auto") else spec.method
+        W = W or (spec.W or None)
+        draws = max(draws, getattr(spec, "draws", 1))
+        spec_or_shape = None
+    if hasattr(spec_or_shape, "dtype") and hasattr(spec_or_shape, "shape"):
+        dtype = str(spec_or_shape.dtype)
+    method = method or "auto"
+    B, K = _normalize_shape(spec_or_shape, shape)
+    dtype_name = str(jnp.dtype(dtype)) if not isinstance(dtype, str) else dtype
+
+    if backend is None:
+        backend = jax.default_backend()
+    key = (B, K, dtype_name, method, W or 0, int(draws), bool(has_key), backend)
+    with _PLAN_LOCK:
+        hit = _PLAN_CACHE.get(key)
+        if hit is not None:
+            _STATS["plan_hits"] += 1
+            return hit
+        _STATS["plan_misses"] += 1
+
+    resolved, resolved_w = method, W
+    if method == "auto":
+        from repro import autotune
+
+        with _PLAN_LOCK:
+            _STATS["autotune_resolves"] += 1
+        resolved, tuned_w = autotune.get_tuner().resolve(
+            B, K, draws=draws, dtype_name=dtype_name, has_key=has_key
+        )
+        resolved_w = W or tuned_w
+    if not resolved_w:
+        from repro.autotune import cost_model as _cm
+
+        resolved_w = _cm.default_w(K)
+
+    p = SamplerPlan(
+        method=resolved,
+        W=int(resolved_w),
+        shape=(B, K),
+        dtype=dtype_name,
+        draws=int(draws),
+        has_key=bool(has_key),
+        backend=backend,
+    )
+    with _PLAN_LOCK:
+        _PLAN_CACHE.setdefault(key, p)
+    return p

@@ -3,24 +3,25 @@
 Token sampling from a vocab-sized categorical per sequence is *exactly* the
 paper's setting (K = vocab, one distribution per batch row, each table used
 once) — the decode step's sampler is the paper's technique as a first-class
-serving feature.  ``ModelConfig.sampler_method`` defaults to ``auto``:
-``repro.autotune`` resolves the (B, vocab) workload to a concrete strategy
-at trace time (tuning cache, then cost model); fixed choices (fenwick |
-two_level | butterfly | kernel | prefix | gumbel | alias) remain available.
+serving feature.  Since the distribution-object redesign the engine builds
+a :class:`repro.sampling.SamplerPlan` in ``make_decode_step`` /
+``make_serve_step`` / ``make_prefill_step`` — ``ModelConfig.sampler_spec``
+(a ``SamplerSpec``) is resolved through ``repro.autotune`` **once per
+(B, vocab) workload at plan time**, not re-dispatched from strings on
+every step; the jitted step then draws through the plan's compiled path.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sampling
 from repro.configs.base import ModelConfig
-from repro.core import sample_from_logits
 from repro.models.model import Model
 from repro.models.params import init_params
 
@@ -32,18 +33,37 @@ class GenerationResult:
     prefill_len: int
 
 
-def make_decode_step(model: Model, temperature: float = 1.0):
+def _logits_plan(cfg: ModelConfig, B: int, V: int, dtype_name: str):
+    """The config's sampler spec, planned for a (B, V) logits workload.
+
+    ``sampling.plan`` memoizes process-wide, so this resolves autotune on
+    the first (shape, dtype) sighting and is a dictionary hit after —
+    whether called eagerly (known batch size) or at trace time."""
+    spec = cfg.sampler_spec
+    return sampling.plan(
+        (B, V), method=spec.method, W=spec.W or None, dtype=dtype_name,
+        draws=spec.draws, has_key=True,
+    )
+
+
+def make_decode_step(
+    model: Model, temperature: float = 1.0, batch_size: Optional[int] = None
+):
     """Jitted single decode step: (params, caches, token, pos, key) ->
-    (next_token, logits, caches)."""
+    (next_token, logits, caches).
+
+    When ``batch_size`` is known up front the sampler plan is built (and
+    autotune resolved) eagerly, before the first trace; otherwise planning
+    happens at trace time on first use and is memoized after."""
     cfg = model.cfg
+    if batch_size is not None:
+        _logits_plan(cfg, batch_size, cfg.padded_vocab, "float32")
 
     @jax.jit
     def step(params, caches, token, pos, key):
         logits, caches = model.decode(params, caches, token, pos)
-        nxt = sample_from_logits(
-            logits, key, temperature=temperature,
-            method=cfg.sampler_method, W=cfg.sampler_W,
-        )
+        p = _logits_plan(cfg, logits.shape[0], logits.shape[1], str(logits.dtype))
+        nxt = p.sample_logits(logits, key, temperature=temperature)
         return nxt[:, None].astype(jnp.int32), logits, caches
 
     return step
@@ -85,11 +105,13 @@ def generate(
     prefill_len = S + prefix
     caches = _pad_caches_to(caches, prefill_len + max_new_tokens)
 
-    step_fn = make_decode_step(model, temperature)
+    step_fn = make_decode_step(model, temperature, batch_size=B)
     k0, key = jax.random.split(key)
-    first = sample_from_logits(
-        last_logits, k0, temperature=temperature,
-        method=cfg.sampler_method, W=cfg.sampler_W,
+    first_plan = _logits_plan(
+        cfg, last_logits.shape[0], last_logits.shape[1], str(last_logits.dtype)
+    )
+    first = first_plan.sample_logits(
+        last_logits, k0, temperature=temperature
     )[:, None].astype(jnp.int32)
 
     out = [np.asarray(first)]
@@ -111,32 +133,38 @@ def generate(
     return GenerationResult(tokens=tokens, steps=tokens.shape[1], prefill_len=prefill_len)
 
 
-def make_serve_step(model: Model, temperature: float = 1.0):
+def make_serve_step(
+    model: Model, temperature: float = 1.0, batch_size: Optional[int] = None
+):
     """The dry-run target: one fused decode+sample step as a pure function
     (params, caches, token, pos, key) -> (next_token, caches)."""
     cfg = model.cfg
+    if batch_size is not None:
+        _logits_plan(cfg, batch_size, cfg.padded_vocab, "float32")
 
     def serve_step(params, caches, token, pos, key):
         logits, caches = model.decode(params, caches, token, pos)
-        nxt = sample_from_logits(
-            logits, key, temperature=temperature,
-            method=cfg.sampler_method, W=cfg.sampler_W,
-        )
+        p = _logits_plan(cfg, logits.shape[0], logits.shape[1], str(logits.dtype))
+        nxt = p.sample_logits(logits, key, temperature=temperature)
         return nxt.astype(jnp.int32), caches
 
     return serve_step
 
 
-def make_prefill_step(model: Model, temperature: float = 1.0):
+def make_prefill_step(
+    model: Model, temperature: float = 1.0, batch_size: Optional[int] = None
+):
     """Dry-run prefill target: (params, batch, key) -> (first_token, caches)."""
     cfg = model.cfg
+    if batch_size is not None:
+        _logits_plan(cfg, batch_size, cfg.padded_vocab, "float32")
 
     def prefill_step(params, batch, key):
         last_logits, caches = model.prefill(params, batch)
-        nxt = sample_from_logits(
-            last_logits, key, temperature=temperature,
-            method=cfg.sampler_method, W=cfg.sampler_W,
+        p = _logits_plan(
+            cfg, last_logits.shape[0], last_logits.shape[1], str(last_logits.dtype)
         )
+        nxt = p.sample_logits(last_logits, key, temperature=temperature)
         return nxt.astype(jnp.int32), caches
 
     return prefill_step
