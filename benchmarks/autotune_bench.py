@@ -23,7 +23,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.sampler_bench import _bench
+try:
+    from benchmarks.sampler_bench import _bench
+except ImportError:  # invoked as a script: benchmarks/ itself is on sys.path
+    from sampler_bench import _bench
 from repro import autotune
 from repro.core import sample_categorical
 

@@ -4,6 +4,12 @@
 Reports us per draw-batch and draws/s; plus the derived HBM-traffic model
 (bytes per sample) that grounds the TPU prediction for each method.
 
+``run_fused`` additionally benches the tiled fused factored z-draw (the
+``lda_kernel`` path: theta-phi weights never materialize) against the
+materializing gather-multiply-then-sample pipeline — the Gibbs-sweep
+restatement of the paper's headline comparison; rows land under
+``fused_factored`` in the JSON.
+
 Also writes ``BENCH_sampler.json`` (path via ``--json PATH``, suppress
 with ``--no-json``) — per-method timing records in the
 ``repro-autotune-bench-v1`` schema the tuning cache consumes
@@ -19,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.autotune import cost_model
 from repro.autotune.cache import BENCH_SCHEMA
 from repro.core import sample_categorical
 
@@ -46,7 +53,7 @@ def traffic_model_bytes(K: int, W: int, method: str) -> float:
     return 4 * K
 
 
-def run(Bs=(4096,), Ks=(64, 256, 1024, 4096), W=32):
+def run(Bs=(4096,), Ks=(64, 256, 1024, 4096), W=32, iters=5):
     rows = []
     rng = np.random.default_rng(0)
     for B in Bs:
@@ -57,12 +64,12 @@ def run(Bs=(4096,), Ks=(64, 256, 1024, 4096), W=32):
             for method in METHODS:
                 if method == "gumbel":
                     fn = jax.jit(lambda w, k: sample_categorical(w, key=k, method="gumbel"))
-                    t = _bench(fn, w, key)
+                    t = _bench(fn, w, key, iters=iters)
                 else:
                     fn = jax.jit(
                         lambda w, u, m=method: sample_categorical(w, u=u, method=m, W=W)
                     )
-                    t = _bench(fn, w, u)
+                    t = _bench(fn, w, u, iters=iters)
                 rows.append(
                     dict(
                         B=B, K=K, method=method, us=t * 1e6,
@@ -70,6 +77,52 @@ def run(Bs=(4096,), Ks=(64, 256, 1024, 4096), W=32):
                         model_bytes_per_sample=traffic_model_bytes(K, W, method),
                     )
                 )
+    return rows
+
+
+def run_fused(Bs=(4096,), Ks=(256, 1024, 4096), W=32, iters=5):
+    """The tiled fused factored z-draw (the LDA hot loop: weights never
+    materialize) vs. the materializing pipeline (gather factor rows, form
+    the (B, K) product, then the two-level draw) at the same workload.
+
+    This is the paper's headline comparison restated for the Gibbs sweep:
+    the fused path should be no slower anywhere and win once K is large
+    enough that the (B, K) round-trip dominates (K >= ~256)."""
+    from repro.core.butterfly import draw_two_level
+    from repro.kernels.lda_draw import lda_draw_factored
+
+    rows = []
+    rng = np.random.default_rng(1)
+    for B in Bs:
+        for K in Ks:
+            C, V = max(1, B // 16), 512
+            theta = jnp.array(rng.uniform(0.1, 1.0, (C, K)).astype(np.float32))
+            phi = jnp.array(rng.uniform(0.1, 1.0, (V, K)).astype(np.float32))
+            doc_ids = jnp.array(rng.integers(0, C, B), jnp.int32)
+            words = jnp.array(rng.integers(0, V, B), jnp.int32)
+            u = jnp.array(rng.uniform(0, 1, B).astype(np.float32))
+            tb, _ = cost_model.default_tiles(B, K, W)
+
+            fused = jax.jit(
+                lambda th, ph, uu: lda_draw_factored(
+                    th, ph, doc_ids, words, uu, W=W, tb=tb
+                )
+            )
+
+            def mat_fn(th, ph, uu):
+                flat = th[doc_ids] * ph[words]          # the (B, K) round-trip
+                return draw_two_level(flat, uu, W=W)
+
+            mat = jax.jit(mat_fn)
+            t_f = _bench(fused, theta, phi, u, iters=iters)
+            t_m = _bench(mat, theta, phi, u, iters=iters)
+            rows.append(
+                dict(
+                    B=B, K=K, W=W, tb=tb, method="lda_kernel",
+                    us=t_f * 1e6, materializing_us=t_m * 1e6,
+                    speedup=t_m / t_f,
+                )
+            )
     return rows
 
 
@@ -113,18 +166,34 @@ def run_reuse(B=4096, K=4096, W=32, draws=16):
     return rows
 
 
-def write_json(rows, path: str = "BENCH_sampler.json", W: int = 32) -> str:
-    """Emit the rows as autotune-ingestible bench records."""
+def write_json(rows, fused_rows=None, path: str = "BENCH_sampler.json",
+               W: int = 32) -> str:
+    """Emit the rows as autotune-ingestible bench records.  Fused-vs-
+    materializing rows land both in ``records`` (the fused timing, so the
+    cache learns the factored winner) and, with their materializing
+    counterpart, under ``fused_factored``."""
+    backend = jax.default_backend()
+
+    def _rec(r, W, method, us):
+        tb, tk = cost_model.default_tiles(r["B"], r["K"], W)
+        return {
+            "backend": backend, "B": r["B"], "K": r["K"],
+            "W": r.get("W", W), "tb": r.get("tb", tb), "tk": r.get("tk", tk),
+            "draws": 1, "dtype": "float32", "method": method, "us": us,
+        }
+
     blob = {
         "schema": BENCH_SCHEMA,
-        "backend": jax.default_backend(),
-        "records": [
+        "backend": backend,
+        "records": [_rec(r, W, r["method"], r["us"]) for r in rows]
+        + [_rec(r, W, r["method"], r["us"]) for r in (fused_rows or [])],
+        "fused_factored": [
             {
-                "backend": jax.default_backend(),
-                "B": r["B"], "K": r["K"], "W": W, "draws": 1,
-                "dtype": "float32", "method": r["method"], "us": r["us"],
+                "B": r["B"], "K": r["K"], "W": r["W"], "tb": r["tb"],
+                "fused_us": r["us"], "materializing_us": r["materializing_us"],
+                "speedup": r["speedup"],
             }
-            for r in rows
+            for r in (fused_rows or [])
         ],
     }
     with open(path, "w") as f:
@@ -141,14 +210,27 @@ def main(argv=None):
     ap.add_argument("--reuse", action="store_true",
                     help="also benchmark build-once/draw-many (Categorical "
                          "reuse) against the one-shot shim")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run: fewer iterations and shapes")
     args = ap.parse_args(argv)
-    rows = run()
+    iters = 2 if args.quick else 5
+    Ks = (256, 1024) if args.quick else (64, 256, 1024, 4096)
+    Bs = (1024,) if args.quick else (4096,)
+    rows = run(Bs=Bs, Ks=Ks, iters=iters)
+    fused_rows = run_fused(Bs=Bs, Ks=tuple(k for k in Ks if k >= 256),
+                           iters=iters)
     print("name,us_per_call,derived")
     for r in rows:
         print(
             f"sampler_{r['method']}_B{r['B']}_K{r['K']},{r['us']:.0f},"
             f"draws_per_s={r['draws_per_s']:.3g};"
             f"model_bytes_per_sample={r['model_bytes_per_sample']:.0f}"
+        )
+    for r in fused_rows:
+        print(
+            f"fused_factored_B{r['B']}_K{r['K']},{r['us']:.0f},"
+            f"materializing_us={r['materializing_us']:.0f};"
+            f"speedup={r['speedup']:.2f}x"
         )
     if args.reuse:
         for r in run_reuse():
@@ -158,7 +240,7 @@ def main(argv=None):
                 f"speedup={r['speedup']:.2f}x"
             )
     if not args.no_json:
-        path = write_json(rows, args.json)
+        path = write_json(rows, fused_rows, args.json)
         print(f"# wrote {path} ({BENCH_SCHEMA}; feed to autotune_bench --import)")
 
 

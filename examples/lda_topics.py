@@ -26,7 +26,7 @@ def main():
     ap.add_argument("--iters", type=int, default=60)
     ap.add_argument("--method", default="butterfly",
                     choices=["auto", "butterfly", "fenwick", "two_level", "prefix",
-                             "gumbel", "kernel"])
+                             "gumbel", "kernel", "lda_kernel"])
     ap.add_argument("--M", type=int, default=256)
     ap.add_argument("--V", type=int, default=500)
     ap.add_argument("--K", type=int, default=12)

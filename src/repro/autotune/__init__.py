@@ -36,8 +36,10 @@ from repro.autotune.cache import (
 )
 from repro.autotune.cost_model import (
     BACKENDS,
+    FACTORED_METHODS,
     BackendParams,
     choose,
+    default_tiles,
     default_w,
     method_cost_eq,
     predict_us,
@@ -50,6 +52,7 @@ from repro.autotune.tables import (
     reset_table_cache,
 )
 from repro.autotune.tuner import (
+    Resolution,
     Tuner,
     candidate_methods,
     get_tuner,
@@ -65,11 +68,29 @@ def resolve(
     draws: int = 1,
     dtype_name: str = "float32",
     has_key: bool = True,
+    factored: bool = False,
 ):
     """Module-level convenience: the global tuner's (method, W) for a
     workload descriptor."""
     return get_tuner().resolve(
-        B, K, draws=draws, dtype_name=dtype_name, has_key=has_key
+        B, K, draws=draws, dtype_name=dtype_name, has_key=has_key,
+        factored=factored,
+    )
+
+
+def resolve_full(
+    B: int,
+    K: int,
+    *,
+    draws: int = 1,
+    dtype_name: str = "float32",
+    has_key: bool = True,
+    factored: bool = False,
+) -> Resolution:
+    """Full resolution including the tiled-kernel tb/tk launch params."""
+    return get_tuner().resolve_full(
+        B, K, draws=draws, dtype_name=dtype_name, has_key=has_key,
+        factored=factored,
     )
 
 
@@ -90,9 +111,10 @@ def reset() -> None:
 
 
 __all__ = [
-    "BACKENDS", "BENCH_SCHEMA", "SCHEMA", "BackendParams", "TableCache",
-    "Tuner", "TuningCache", "bucket_key", "candidate_methods", "choose",
-    "content_digest", "default_cache_path", "default_w", "get_table_cache",
-    "get_tuner", "measure_method", "method_cost_eq", "predict_us",
-    "rank_methods", "reset", "reset_table_cache", "reset_tuner", "resolve",
+    "BACKENDS", "BENCH_SCHEMA", "FACTORED_METHODS", "SCHEMA", "BackendParams",
+    "Resolution", "TableCache", "Tuner", "TuningCache", "bucket_key",
+    "candidate_methods", "choose", "content_digest", "default_cache_path",
+    "default_tiles", "default_w", "get_table_cache", "get_tuner",
+    "measure_method", "method_cost_eq", "predict_us", "rank_methods",
+    "reset", "reset_table_cache", "reset_tuner", "resolve", "resolve_full",
 ]

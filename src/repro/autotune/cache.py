@@ -9,10 +9,10 @@ On-disk format (``~/.cache/repro/autotune.json`` by default, overridable
 via ``$REPRO_AUTOTUNE_CACHE``)::
 
     {
-      "schema": "repro-autotune-v1",
+      "schema": "repro-autotune-v2",
       "entries": {
         "cpu|B4096|K1024|d1|float32|key": {
-          "method": "two_level", "W": 32, "us": 184.2,
+          "method": "two_level", "W": 32, "tb": 8, "tk": 512, "us": 184.2,
           "source": "measured" | "model" | "bench"
         },
         ...
@@ -20,7 +20,10 @@ via ``$REPRO_AUTOTUNE_CACHE``)::
     }
 
 (the trailing ``key``/``nokey`` records whether the caller had a PRNG key
-— the two candidate sets differ, so they tune independently)
+— the two candidate sets differ, so they tune independently; factored
+workloads append ``|fac`` for the same reason.  ``tb``/``tk`` are the
+winning draw-kernel row tile and pass-A category tile — new in v2; v1
+files load fine, their entries simply fall back to the kernel defaults)
 
 ``benchmarks/sampler_bench.py --json`` emits per-method timing *records*
 in the same schema family (``repro-autotune-bench-v1``); feed them to
@@ -39,7 +42,9 @@ import tempfile
 import threading
 from typing import Dict, Iterable, List, Optional
 
-SCHEMA = "repro-autotune-v1"
+SCHEMA = "repro-autotune-v2"
+# older cache files we still read (entries simply lack the v2 tile fields)
+COMPAT_SCHEMAS = ("repro-autotune-v1", SCHEMA)
 BENCH_SCHEMA = "repro-autotune-bench-v1"
 
 # precedence when deciding whether a new record may overwrite an old one
@@ -62,14 +67,18 @@ def _bucket(n: int) -> int:
 
 
 def bucket_key(
-    backend: str, B: int, K: int, draws: int, dtype: str, has_key: bool = True
+    backend: str, B: int, K: int, draws: int, dtype: str, has_key: bool = True,
+    factored: bool = False,
 ) -> str:
     """Shape-bucket cache key.  ``has_key`` is part of the key: callers
     without a PRNG key have a smaller candidate set (no gumbel/alias), so
     a keyed winner must not shadow — or be clobbered by — the key-less
-    winner for the same shapes."""
+    winner for the same shapes.  ``factored`` workloads (weights arrive as
+    a theta-phi product; the fused lda_kernel path is a candidate) tune
+    separately for the same reason."""
     kd = "key" if has_key else "nokey"
-    return f"{backend}|B{_bucket(B)}|K{_bucket(K)}|d{_bucket(draws)}|{dtype}|{kd}"
+    base = f"{backend}|B{_bucket(B)}|K{_bucket(K)}|d{_bucket(draws)}|{dtype}|{kd}"
+    return base + "|fac" if factored else base
 
 
 class TuningCache:
@@ -92,7 +101,7 @@ class TuningCache:
                 blob = json.load(f)
         except (OSError, ValueError):
             return 0
-        if not isinstance(blob, dict) or blob.get("schema") != SCHEMA:
+        if not isinstance(blob, dict) or blob.get("schema") not in COMPAT_SCHEMAS:
             return 0
         entries = blob.get("entries")
         if not isinstance(entries, dict):
@@ -151,11 +160,19 @@ class TuningCache:
         W: int,
         us: float,
         source: str = "measured",
+        tb: Optional[int] = None,
+        tk: Optional[int] = None,
     ) -> Dict:
         """Record a winner.  Lower-precedence sources never clobber
         higher-precedence ones (a cost-model guess won't erase a measured
-        winner), equal-precedence keeps the faster entry."""
+        winner), equal-precedence keeps the faster entry.  ``tb``/``tk``
+        (v2 schema) record the winning draw/pass-A tile sizes; v1 entries
+        without them fall back to the kernel defaults on read."""
         rec = {"method": method, "W": int(W), "us": float(us), "source": source}
+        if tb:
+            rec["tb"] = int(tb)
+        if tk:
+            rec["tk"] = int(tk)
         rank = _SOURCE_RANK.get(source, 0)
         with self._lock:
             old = self._entries.get(key)
@@ -180,14 +197,15 @@ class TuningCache:
         """
         if isinstance(blob_or_records, dict):
             schema = blob_or_records.get("schema")
-            if schema == SCHEMA:  # a cache file: merge its entries directly
+            if schema in COMPAT_SCHEMAS:  # a cache file: merge entries directly
                 n = 0
                 for key, rec in (blob_or_records.get("entries") or {}).items():
                     try:
                         # require a real timing: a defaulted us would rank
                         # as an unbeatable 0-cost winner forever
                         self.put(key, rec["method"], rec.get("W", 32),
-                                 float(rec["us"]), source=source)
+                                 float(rec["us"]), source=source,
+                                 tb=rec.get("tb"), tk=rec.get("tk"))
                         n += 1
                     except (KeyError, TypeError, ValueError):
                         continue
@@ -198,28 +216,33 @@ class TuningCache:
         else:
             records = blob_or_records
         # timing records cover both caller kinds: the key-less bucket only
-        # considers methods a u-based caller can run
+        # considers methods a u-based caller can run; factored methods
+        # only compete in the factored buckets (and vice versa)
+        from repro.autotune.cost_model import FACTORED_METHODS
         from repro.autotune.tuner import KEY_METHODS
 
         best: Dict[str, Dict] = {}
         for r in records:
             try:
                 us = float(r["us"])
+                factored = r["method"] in FACTORED_METHODS
                 for has_key in (True, False):
                     if not has_key and r["method"] in KEY_METHODS:
                         continue
                     key = bucket_key(
                         r.get("backend", "cpu"), r["B"], r["K"],
                         r.get("draws", 1), r.get("dtype", "float32"),
-                        has_key=has_key,
+                        has_key=has_key, factored=factored,
                     )
                     if key not in best or us < best[key]["us"]:
                         best[key] = {"method": r["method"],
-                                     "W": int(r.get("W", 32)), "us": us}
+                                     "W": int(r.get("W", 32)), "us": us,
+                                     "tb": r.get("tb"), "tk": r.get("tk")}
             except (KeyError, TypeError, ValueError):
                 continue
         for key, rec in best.items():
-            self.put(key, rec["method"], rec["W"], rec["us"], source=source)
+            self.put(key, rec["method"], rec["W"], rec["us"], source=source,
+                     tb=rec.get("tb"), tk=rec.get("tk"))
         return len(best)
 
     def clear(self) -> None:

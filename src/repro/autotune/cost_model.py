@@ -101,6 +101,25 @@ def default_w(K: int) -> int:
     return max(8, min(128, w))
 
 
+def default_tiles(B: int, K: int, W: Optional[int] = None) -> Tuple[int, int]:
+    """Default (tb, tk) tile sizes for the tiled draw kernels — the
+    autotune-visible twins of ``repro.kernels.runtime``'s policy (tb rows
+    per grid step for the draw kernels, tk categories per pass-A tile)."""
+    from repro.kernels import runtime
+
+    W = W or default_w(K)
+    return runtime.default_tb(B), runtime.default_tk(K, W)
+
+
+# variants built straight from a (theta, phi) factorization; candidates
+# only when the workload supplies factors (tuner ``factored=True``)
+FACTORED_METHODS = ("lda_kernel",)
+# surcharge for running a flat-weight method on a factored workload:
+# the (B, K) product must be materialized first (read both factor rows,
+# write the flat row) before the method's own build reads it back
+FACTOR_MATERIALIZE_EQ = 2.0
+
+
 def method_cost_eq(
     method: str,
     K: int,
@@ -109,6 +128,7 @@ def method_cost_eq(
     draws: int = 1,
     dtype_bytes: int = 4,
     backend: str = "cpu",
+    factored: bool = False,
 ) -> float:
     """Effective bytes per row for one draw, with the table build amortized
     over ``draws`` uses of the same distribution.
@@ -117,6 +137,11 @@ def method_cost_eq(
     actually reuses between calls via the table cache (alias / fenwick —
     the ``dist_key`` paths in ``repro.core.api``); everything else redoes
     its work every call, so the build term is charged in full.
+
+    ``factored=True`` costs the LDA-style workload where weights arrive as
+    a (theta, phi) product: flat-weight methods pay the materialization
+    surcharge (``FACTOR_MATERIALIZE_EQ * K``) on top of their own build,
+    the factored methods build straight from the factor rows.
     """
     bp = backend_params(backend)
     c = float(dtype_bytes)
@@ -125,6 +150,16 @@ def method_cost_eq(
     log2K = math.log2(max(K, 2))
     log2W = math.log2(max(W, 2))
 
+    if method == "lda_kernel":
+        if not factored:
+            raise ValueError("lda_kernel is only viable on factored workloads")
+        # pass A reads both factor rows, writes only K/W running sums; the
+        # draw re-reads one W-block of each factor row.  Fused single
+        # dispatch on TPU; the XLA twin elsewhere (never interpret mode).
+        build = 2.0 * K * c + (K / W) * c
+        draw = 2.0 * W * c + 2.0 * LINE_EQ + BLOCK_SETUP_EQ
+        eq = build / d + draw
+        return eq * KERNEL_FUSION if bp.has_pallas else eq
     if method == "prefix":
         build = 2.0 * K * c                        # read weights + write prefix
         draw = log2K * LINE_EQ                     # binary-search gathers
@@ -141,7 +176,8 @@ def method_cost_eq(
         draw = W * c + 2.0 * LINE_EQ + BLOCK_SETUP_EQ
     elif method == "kernel":
         base = method_cost_eq(
-            "two_level", K, W=W, draws=d, dtype_bytes=dtype_bytes, backend=backend
+            "two_level", K, W=W, draws=d, dtype_bytes=dtype_bytes,
+            backend=backend, factored=factored,
         )
         if not bp.has_pallas:
             # interpret mode: every Pallas op is a Python-level emulation
@@ -157,6 +193,8 @@ def method_cost_eq(
         draw = 2.0 * LINE_EQ + c
     else:
         raise ValueError(f"cost model knows no method {method!r}")
+    if factored:
+        build = build + FACTOR_MATERIALIZE_EQ * K * c
     return build / d + draw
 
 
@@ -169,11 +207,13 @@ def predict_us(
     draws: int = 1,
     dtype_bytes: int = 4,
     backend: str = "cpu",
+    factored: bool = False,
 ) -> float:
     """Predicted microseconds for one (B, K) draw batch."""
     bp = backend_params(backend)
     eq = method_cost_eq(
-        method, K, W=W, draws=draws, dtype_bytes=dtype_bytes, backend=backend
+        method, K, W=W, draws=draws, dtype_bytes=dtype_bytes, backend=backend,
+        factored=factored,
     )
     return bp.launch_us + B * eq / (bp.bandwidth_gbps * 1e3)
 
@@ -186,13 +226,14 @@ def rank_methods(
     draws: int = 1,
     dtype_bytes: int = 4,
     backend: str = "cpu",
+    factored: bool = False,
 ) -> List[Tuple[float, str, int]]:
     """Sort candidate methods by predicted cost: [(us, method, W), ...]."""
     W = default_w(K)
     ranked = [
         (
             predict_us(m, B, K, W=W, draws=draws, dtype_bytes=dtype_bytes,
-                       backend=backend),
+                       backend=backend, factored=factored),
             m,
             W,
         )
@@ -210,9 +251,11 @@ def choose(
     draws: int = 1,
     dtype_bytes: int = 4,
     backend: str = "cpu",
+    factored: bool = False,
 ) -> Tuple[str, int, float]:
     """Best (method, W, predicted_us) among ``candidates``."""
     us, method, W = rank_methods(
-        candidates, B, K, draws=draws, dtype_bytes=dtype_bytes, backend=backend
+        candidates, B, K, draws=draws, dtype_bytes=dtype_bytes, backend=backend,
+        factored=factored,
     )[0]
     return method, W, us

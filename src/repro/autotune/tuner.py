@@ -31,6 +31,7 @@ it with a real timing.
 
 from __future__ import annotations
 
+import dataclasses
 import os
 import time
 from typing import Optional, Sequence, Tuple
@@ -46,6 +47,24 @@ U_METHODS = ("prefix", "fenwick", "two_level", "butterfly")
 KEY_METHODS = ("gumbel", "alias")
 
 MODES = ("measure", "model", "off")
+
+
+@dataclasses.dataclass(frozen=True)
+class Resolution:
+    """A full tuner answer: strategy plus the tiled-kernel parameters.
+
+    ``tb`` (draw-kernel rows per grid step) and ``tk`` (pass-A category
+    tile) matter only to the kernel-backed methods but are recorded for
+    every bucket so a cache hit restores the complete launch config."""
+
+    method: str
+    W: int
+    tb: int
+    tk: int
+    source: str = "model"
+
+    def pair(self) -> Tuple[str, int]:
+        return self.method, self.W
 
 
 def _mode_from_env() -> str:
@@ -65,17 +84,19 @@ def _tracing_active() -> bool:
 
 
 def candidate_methods(
-    B: int, K: int, backend: str, has_key: bool
+    B: int, K: int, backend: str, has_key: bool, factored: bool = False
 ) -> Tuple[str, ...]:
     """All viable strategies for this workload: core u-based methods,
     key-based methods when a key is available, plus whatever the kernels
-    registry says compiles natively on this backend."""
+    registry says runs well on this backend.  ``factored=True`` (the
+    weights arrive as a theta-phi product — the LDA z-draw) additionally
+    admits the fused factored kernels."""
     from repro import kernels
 
     cands = list(U_METHODS)
     if has_key:
         cands.extend(KEY_METHODS)
-    cands.extend(kernels.candidates(B, K, backend))
+    cands.extend(kernels.candidates(B, K, backend, factored=factored))
     return tuple(dict.fromkeys(cands))  # dedupe, keep order
 
 
@@ -89,9 +110,16 @@ def measure_method(
     iters: int = 3,
     warmup: int = 1,
     seed: int = 0,
+    factored: bool = False,
 ) -> Optional[float]:
     """Median wall-clock microseconds of one jitted (B, K) draw batch on
-    synthetic weights; ``None`` if the method fails on this shape."""
+    synthetic weights; ``None`` if the method fails on this shape.
+
+    ``factored=True`` times the workload the factored buckets describe:
+    weights arrive as a theta-phi product, so flat-weight methods are
+    timed *including* the gather + (B, K) materialization they really
+    pay there — otherwise measure mode would systematically undercount
+    them against ``lda_kernel``."""
     import jax
     import jax.numpy as jnp
 
@@ -102,9 +130,41 @@ def measure_method(
     w = jnp.asarray(rng.uniform(0.1, 1.0, size=(B, K)), dtype=dtype)
     u = jnp.asarray(rng.uniform(0.0, 1.0, size=(B,)), jnp.float32)
     key = jax.random.PRNGKey(seed)
+    if factored:
+        # an LDA-shaped factorization at the real (B, K)
+        C, V = max(1, B // 32), 64
+        theta = jnp.asarray(rng.uniform(0.1, 1.0, size=(C, K)), dtype=dtype)
+        phi = jnp.asarray(rng.uniform(0.1, 1.0, size=(V, K)), dtype=dtype)
+        doc_ids = jnp.asarray(rng.integers(0, C, size=(B,)), jnp.int32)
+        words = jnp.asarray(rng.integers(0, V, size=(B,)), jnp.int32)
 
     try:
-        if method in KEY_METHODS:
+        if method in cost_model.FACTORED_METHODS:
+            if not factored:
+                return None
+            from repro.kernels.lda_draw import lda_draw_factored
+
+            fn = jax.jit(
+                lambda th, ph, uu: lda_draw_factored(
+                    th, ph, doc_ids, words, uu, W=W
+                )
+            )
+            args = (theta, phi, u)
+        elif factored and method not in KEY_METHODS:
+            fn = jax.jit(
+                lambda th, ph, uu: _api.sample_categorical(
+                    th[doc_ids] * ph[words], u=uu, method=method, W=W
+                )
+            )
+            args = (theta, phi, u)
+        elif factored and method in KEY_METHODS:
+            fn = jax.jit(
+                lambda th, ph, k: _api.sample_categorical(
+                    th[doc_ids] * ph[words], key=k, method=method, W=W
+                )
+            )
+            args = (theta, phi, key)
+        elif method in KEY_METHODS:
             fn = jax.jit(
                 lambda w, k: _api.sample_categorical(w, key=k, method=method, W=W)
             )
@@ -161,40 +221,74 @@ class Tuner:
         draws: int = 1,
         dtype_name: str = "float32",
         has_key: bool = True,
+        factored: bool = False,
         candidates: Optional[Sequence[str]] = None,
     ) -> Tuple[str, int]:
+        """Back-compat (method, W) resolution; see :meth:`resolve_full`."""
+        return self.resolve_full(
+            B, K, draws=draws, dtype_name=dtype_name, has_key=has_key,
+            factored=factored, candidates=candidates,
+        ).pair()
+
+    def resolve_full(
+        self,
+        B: int,
+        K: int,
+        *,
+        draws: int = 1,
+        dtype_name: str = "float32",
+        has_key: bool = True,
+        factored: bool = False,
+        candidates: Optional[Sequence[str]] = None,
+    ) -> Resolution:
+        """Full resolution including the tiled-kernel ``tb``/``tk``
+        launch parameters (v2 cache records persist them; v1 records fall
+        back to the kernel defaults for the bucket shape)."""
         backend = self.backend
         cands = tuple(
             candidates
             if candidates is not None
-            else candidate_methods(B, K, backend, has_key)
+            else candidate_methods(B, K, backend, has_key, factored=factored)
         )
         mode = self.mode
-        key = bucket_key(backend, B, K, draws, dtype_name, has_key=has_key)
+        key = bucket_key(
+            backend, B, K, draws, dtype_name, has_key=has_key, factored=factored
+        )
 
         if mode != "off":
             hit = self.cache.get(key)
             if hit is not None and hit["method"] in cands:
                 if not (mode == "measure" and hit.get("source") == "model"):
-                    return hit["method"], int(hit.get("W", 32))
+                    W = int(hit.get("W", 32))
+                    tb0, tk0 = cost_model.default_tiles(B, K, W)
+                    return Resolution(
+                        method=hit["method"], W=W,
+                        tb=int(hit.get("tb") or tb0),
+                        tk=int(hit.get("tk") or tk0),
+                        source=str(hit.get("source", "model")),
+                    )
 
         dtype_bytes = 2 if "16" in dtype_name else 8 if "64" in dtype_name else 4
         if mode == "measure" and not _tracing_active():
             method, W, us = self._tune(
-                cands, B, K, draws, dtype_name, dtype_bytes, backend
+                cands, B, K, draws, dtype_name, dtype_bytes, backend,
+                factored=factored,
             )
             source = "measured"
         else:
             method, W, us = cost_model.choose(
-                cands, B, K, draws=draws, dtype_bytes=dtype_bytes, backend=backend
+                cands, B, K, draws=draws, dtype_bytes=dtype_bytes,
+                backend=backend, factored=factored,
             )
             source = "model"
+        tb, tk = cost_model.default_tiles(B, K, W)
         if mode != "off":
-            self.cache.put(key, method, W, us, source=source)
+            self.cache.put(key, method, W, us, source=source, tb=tb, tk=tk)
             self.cache.save_if_dirty()
-        return method, W
+        return Resolution(method=method, W=W, tb=tb, tk=tk, source=source)
 
-    def _tune(self, cands, B, K, draws, dtype_name, dtype_bytes, backend):
+    def _tune(self, cands, B, K, draws, dtype_name, dtype_bytes, backend,
+              factored=False):
         """Time every candidate at the bucket's representative shape (the
         blocked methods at a small W sweep around the model's guess); fall
         back to the cost model if everything fails (e.g. OOM shapes)."""
@@ -202,12 +296,13 @@ class Tuner:
 
         dtype = jnp.dtype(dtype_name)
         w_guess = cost_model.default_w(K)
-        blocked = ("fenwick", "two_level", "butterfly", "kernel")
+        blocked = ("fenwick", "two_level", "butterfly", "kernel", "lda_kernel")
         best = None
         for method in cands:
             ws = sorted({w_guess, 32}) if method in blocked else (w_guess,)
             for W in ws:
-                us = measure_method(method, B, K, W, dtype=dtype)
+                us = measure_method(method, B, K, W, dtype=dtype,
+                                    factored=factored)
                 if us is None:
                     continue
                 if draws > 1 and method in cost_model.CACHED_TABLE_METHODS:
@@ -224,7 +319,8 @@ class Tuner:
                     best = (us, method, W)
         if best is None:
             method, W, us = cost_model.choose(
-                cands, B, K, draws=draws, dtype_bytes=dtype_bytes, backend=backend
+                cands, B, K, draws=draws, dtype_bytes=dtype_bytes,
+                backend=backend, factored=factored,
             )
             return method, W, us
         us, method, W = best

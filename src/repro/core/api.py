@@ -34,10 +34,17 @@ Methods:
   * ``two_level`` — fused two-pass draw: (B, K/W) block sums + one gathered
                     W-block per sample, no K-length table ever materializes
                     (the pure-XLA twin of the Pallas kernel)
-  * ``kernel``    — fused two-pass Pallas kernel (interpret-mode on CPU)
+  * ``kernel``    — fused tiled Pallas kernel (one pallas_call on TPU;
+                    block selection in-kernel — DESIGN.md §3)
   * ``prefix``    — Alg. 1/3 full prefix sums + searchsorted (baseline)
   * ``gumbel``    — Gumbel-max one-pass baseline
   * ``alias``     — Walker/Vose alias tables (related-work baseline)
+
+Factored workloads (weights as a theta-phi product — the LDA z-draw)
+have their own zero-materialization path: build with
+``repro.sampling.Categorical.from_factors`` (variant ``lda_kernel``) and
+refresh with ``refresh_from_factors`` — never flatten the product just
+to call this shim.
 
 Repeated distributions: pass ``dist_key="..."`` (with ``draws=`` as a
 reuse hint for ``auto``) and the alias/Fenwick state is memoized in

@@ -25,6 +25,9 @@ class KernelCandidate:
     # on CPU is an emulation (orders of magnitude slow) — never a candidate.
     available: Callable[[int, int, str], bool]
     description: str = ""
+    # factored candidates need the workload's weights as a (theta, phi)
+    # product — only offered when the caller says factored=True
+    factored: bool = False
 
 
 _REGISTRY: Tuple[KernelCandidate, ...] = (
@@ -34,22 +37,33 @@ _REGISTRY: Tuple[KernelCandidate, ...] = (
         # pltpu-based: compiles natively on TPU only; every other backend
         # (including GPU) would silently run the interpret-mode emulation
         available=lambda B, K, backend: backend == "tpu" and K >= 2,
-        description="fused two-pass butterfly draw (block sums stay in VMEM)",
+        description="fused tiled butterfly draw (block selection in-kernel)",
+    ),
+    KernelCandidate(
+        method="lda_kernel",
+        module="repro.kernels.lda_draw",
+        # viable everywhere: the Pallas kernel on TPU, the pure-XLA
+        # zero-materialization twin elsewhere (never interpret mode)
+        available=lambda B, K, backend: K >= 2,
+        description="fused factored theta-phi draw (weights never materialize)",
+        factored=True,
     ),
 )
 
 
 def candidates(
-    B: int, K: int, backend: Optional[str] = None
+    B: int, K: int, backend: Optional[str] = None, factored: bool = False
 ) -> Tuple[str, ...]:
     """Kernel-backed method names viable for a (B, K) draw on ``backend``
-    (default: the current JAX backend)."""
+    (default: the current JAX backend).  ``factored=True`` adds the
+    strategies that consume a (theta, phi) factorization directly."""
     if backend is None:
         import jax
 
         backend = jax.default_backend()
     return tuple(
-        c.method for c in _REGISTRY if c.available(B, K, backend)
+        c.method for c in _REGISTRY
+        if c.available(B, K, backend) and (factored or not c.factored)
     )
 
 

@@ -5,12 +5,10 @@ table*: the butterfly table is "just adequate" to reconstruct the partial
 sums a binary search touches.  On TPU the analogous HBM-traffic statement
 is (DESIGN.md §2):
 
-  pass A  (``_blocksum_kernel``)  streams (TB, TK) weight tiles through
+  pass A  (``_blocksum_kernel``)  streams (tb, tk) weight tiles through
           VMEM and emits only the per-W-block sums — HBM: read B*K,
           write B*K/W.
-  (host)  the tiny (B, K/W) running-sum/searchsorted step picks each
-          sample's block (the paper's Alg. 9 block-level search).
-  pass B  (``_search_kernel``)   re-reads *only the selected W-block* per
+  pass B  (``_walk_kernel``)      re-reads *only the selected W-block* per
           sample (scalar-prefetch drives the BlockSpec index_map — the
           Pallas analogue of the data-dependent fetch the GPU warp does),
           builds the dyadic segment table in registers (the TPU-adapted
@@ -21,6 +19,32 @@ Total HBM traffic ~ B*K*(1 + 1/W) + B*W versus >= 3*B*K for the classic
 prefix-table route (write prefix, re-read during search with scattered
 gathers).  That x2-3 traffic reduction is the TPU translation of the
 paper's >2x speedup for K >= 200.
+
+Tiled-grid layout (DESIGN.md §3).  Both draw-side kernels run a *tiled*
+grid rather than one grid step per sample:
+
+  * ``_fused_draw_kernel`` is the one-``pallas_call`` end-to-end draw:
+    grid ``(B//tb,)``, each step loads a (tb, Kp) weight tile, reduces it
+    to block sums, selects each row's W-block and walks the in-register
+    dyadic table — block selection (the running-sum/searchsorted step
+    that used to round-trip through XLA between pass A and pass B) is
+    folded into the kernel, and the whole (tb, W) tile walks its log2(W)
+    levels in lock-step on the VPU.
+  * ``_walk_kernel`` is the table-in pass B for prebuilt ``(wp, running)``
+    state: grid ``(B//tb, tb)``; the inner grid dimension streams one
+    scalar-prefetch-selected W-block per sample into a (tb, W) VMEM
+    accumulator (per-row DMA is unavoidable for scattered blocks — this
+    is the coalescing the paper's warp does — but Pallas double-buffers
+    it), and the last inner step runs the vectorized selection + walk for
+    the whole tile.  Only the block *address* ``jb`` is computed outside
+    (the DMA engine needs it before the kernel body runs); stop/lo and
+    the selection arithmetic are recomputed in-kernel from the fetched
+    running-sum rows, bit-identically.
+
+All dynamic per-row indexing inside the kernels is expressed as one-hot
+masked reductions over a ``broadcasted_iota`` — the Mosaic-friendly form
+of a gather — so the same kernel body compiles natively on TPU and runs
+under interpret mode elsewhere.
 """
 
 from __future__ import annotations
@@ -33,12 +57,82 @@ import numpy as np
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import runtime
+
 # jax renamed TPUCompilerParams -> CompilerParams; support both
 _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 
 # ---------------------------------------------------------------------------
-# Pass A: per-W-block sums
+# Shared tile math: vectorized (TB, W) selection + dyadic walk
+# ---------------------------------------------------------------------------
+
+
+def _fenwick_tile(t: jnp.ndarray, W: int) -> jnp.ndarray:
+    """Blelloch up-sweep over every W-segment of a (TB, W) tile: position d
+    with ntz(d+1)=l accumulates S[d-2^l+1..d] (Fenwick layout)."""
+    TB = t.shape[0]
+    for b in range(int(np.log2(W))):
+        bit = 1 << b
+        t2 = t.reshape(TB, W // (2 * bit), 2 * bit)
+        t2 = t2.at[:, :, 2 * bit - 1].add(t2[:, :, bit - 1])
+        t = t2.reshape(TB, W)
+    return t
+
+
+def _descent_tile(t, stop, lo, W: int):
+    """Vectorized add-only descent (Alg. 10, TPU-adapted): every row of the
+    (TB, W) Fenwick tile walks its log2(W) levels in lock-step; the
+    per-row dynamic read is a one-hot masked lane reduction."""
+    TB = t.shape[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (TB, W), 1)
+    acc = lo
+    R = jnp.zeros((TB,), jnp.int32)
+    for b in range(int(np.log2(W)) - 1, -1, -1):
+        bit = 1 << b
+        pos = R + (bit - 1)
+        y = jnp.sum(jnp.where(lane == pos[:, None], t, 0.0), axis=1)
+        mid = acc + y
+        go_high = stop >= mid
+        acc = jnp.where(go_high, mid, acc)
+        R = jnp.where(go_high, R + bit, R)
+    return R
+
+
+def _select_tile(running, stop, W: int):
+    """In-kernel block-level search (the paper's Alg. 9): smallest block c
+    with stop < running[c], plus the exclusive prefix ``lo`` below it.
+    ``running``: (TB, nb) running block sums; ``stop``: (TB,)."""
+    TB, nb = running.shape
+    jb = jnp.clip(
+        jnp.sum((running <= stop[:, None]).astype(jnp.int32), axis=1), 0, nb - 1
+    )
+    bidx = jax.lax.broadcasted_iota(jnp.int32, (TB, nb), 1)
+    lo = jnp.sum(jnp.where(bidx == jb[:, None] - 1, running, 0.0), axis=1)
+    return jb, lo
+
+
+def _draw_tile(w, u, W: int):
+    """The complete fused draw for one (TB, Kp) tile already in VMEM:
+    block sums -> running sums -> block selection -> Fenwick build ->
+    add-only descent.  Returns (TB,) int32 indices into [0, Kp)."""
+    TB, Kp = w.shape
+    nb = Kp // W
+    blocks = w.reshape(TB, nb, W)
+    running = jnp.cumsum(blocks.sum(axis=-1), axis=-1)          # (TB, nb)
+    stop = running[:, -1] * u
+    jb, lo = _select_tile(running, stop, W)
+    bidx = jax.lax.broadcasted_iota(jnp.int32, (TB, nb), 1)
+    sel = jnp.sum(
+        jnp.where((bidx == jb[:, None])[:, :, None], blocks, 0.0), axis=1
+    )                                                            # (TB, W)
+    t = _fenwick_tile(sel, W)
+    R = _descent_tile(t, stop, lo, W)
+    return jb * W + R
+
+
+# ---------------------------------------------------------------------------
+# Pass A: per-W-block sums (tiled over both axes)
 # ---------------------------------------------------------------------------
 
 
@@ -49,9 +143,10 @@ def _blocksum_kernel(w_ref, out_ref, *, W: int):
 
 
 def blocksums_pallas(
-    weights: jnp.ndarray, W: int, tb: int, tk: int, interpret: bool = True
+    weights: jnp.ndarray, W: int, tb: int, tk: int, interpret: bool | None = None
 ) -> jnp.ndarray:
     """(B, K) -> (B, K//W) per-block sums; B % tb == 0, K % tk == 0, tk % W == 0."""
+    interpret = runtime.resolve_interpret(interpret)
     B, K = weights.shape
     grid = (B // tb, K // tk)
     return pl.pallas_call(
@@ -68,70 +163,144 @@ def blocksums_pallas(
 
 
 # ---------------------------------------------------------------------------
-# Pass B: fetch selected block, build in-register dyadic table, walk
+# Fused end-to-end draw: ONE pallas_call, grid (B//tb,)
 # ---------------------------------------------------------------------------
 
-
-def _search_kernel(jb_ref, w_ref, stop_ref, lo_ref, out_ref, *, W: int):
-    log2w = int(np.log2(W))
-    t = w_ref[0, :].astype(jnp.float32)  # the sample's selected W-block
-    # Blelloch up-sweep: position d with ntz(d+1)=l accumulates S[d-2^l+1..d]
-    for b in range(log2w):
-        bit = 1 << b
-        t2 = t.reshape(W // (2 * bit), 2 * bit)
-        t2 = t2.at[:, 2 * bit - 1].add(t2[:, bit - 1])
-        t = t2.reshape(W)
-    stop = stop_ref[0, 0]
-    acc = lo_ref[0, 0]
-    R = jnp.int32(0)
-    # add-only descent (the in-block search of Alg. 10, TPU-adapted)
-    for b in range(log2w - 1, -1, -1):
-        bit = 1 << b
-        y = jax.lax.dynamic_index_in_dim(t, R + (bit - 1), keepdims=False)
-        mid = acc + y
-        go_high = stop >= mid
-        acc = jnp.where(go_high, mid, acc)
-        R = jnp.where(go_high, R + bit, R)
-    b_id = pl.program_id(0)
-    out_ref[0, 0] = jb_ref[b_id] * W + R
+# VMEM budget for the fused draw's (tb, Kp) weight tile (fp32 bytes).
+# Beyond it the row tile shrinks, and past tb=8 the draw falls back to the
+# two-pass route, whose pass A streams (tb, tk) tiles and whose pass B
+# touches (1, W) blocks — safe at any K (vocab-scale included).
+_FUSED_TILE_BYTES = 4 << 20
 
 
-def search_pallas(
-    weights: jnp.ndarray,
-    jb: jnp.ndarray,
-    stop: jnp.ndarray,
-    lo: jnp.ndarray,
-    W: int,
-    interpret: bool = True,
+def _fused_tb(tb: int, Kp: int) -> int:
+    while tb > 8 and tb * Kp * 4 > _FUSED_TILE_BYTES:
+        tb //= 2
+    return tb
+
+
+def _fused_draw_kernel(w_ref, u_ref, out_ref, *, W: int):
+    w = w_ref[...].astype(jnp.float32)                 # (TB, Kp)
+    idx = _draw_tile(w, u_ref[:, 0].astype(jnp.float32), W)
+    out_ref[:, 0] = idx
+
+
+def fused_draw_pallas(
+    wp: jnp.ndarray, u: jnp.ndarray, W: int, tb: int, interpret: bool | None = None
 ) -> jnp.ndarray:
-    """Per-sample in-block search.  ``jb`` (B,) selected block indices drive
-    the weights BlockSpec via scalar prefetch (data-dependent tiling)."""
-    B, K = weights.shape
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(B,),
-        in_specs=[
-            pl.BlockSpec((1, W), lambda b, jb_ref: (b, jb_ref[b])),
-            pl.BlockSpec((1, 1), lambda b, jb_ref: (b, 0)),
-            pl.BlockSpec((1, 1), lambda b, jb_ref: (b, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1), lambda b, jb_ref: (b, 0)),
-    )
+    """One-kernel fused draw over padded (Bp, Kp) weights; ``u`` (Bp,).
+    Bp % tb == 0, Kp % W == 0.  Block selection happens in-kernel — no
+    XLA round-trip between the block-sum and walk phases."""
+    interpret = runtime.resolve_interpret(interpret)
+    Bp, Kp = wp.shape
     out = pl.pallas_call(
-        functools.partial(_search_kernel, W=W),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        functools.partial(_fused_draw_kernel, W=W),
+        grid=(Bp // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, Kp), lambda i: (i, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel",),
+        ),
         interpret=interpret,
-    )(jb.astype(jnp.int32), weights, stop[:, None], lo[:, None])
+    )(wp, u[:, None])
     return out[:, 0]
 
 
 # ---------------------------------------------------------------------------
-# Table-in/table-out halves + fused end-to-end draw
+# Pass B (table-in): tiled walk over prebuilt (wp, running) state
 # ---------------------------------------------------------------------------
 
 
-def _build_sums_impl(weights, W: int, tb: int, tk: int, interpret: bool):
+def _walk_kernel(
+    rows_ref, jb_ref, wblk_ref, run_ref, u_ref, out_ref, blk_acc, run_acc,
+    *, W: int, TB: int,
+):
+    r = pl.program_id(1)
+    # stream this sample's scalar-prefetch-selected W-block (and its
+    # running-sum row) into the tile accumulators
+    blk_acc[r, :] = wblk_ref[0, :].astype(jnp.float32)
+    run_acc[r, :] = run_ref[0, :].astype(jnp.float32)
+
+    @pl.when(r == TB - 1)
+    def _walk():
+        running = run_acc[...]
+        stop = running[:, -1] * u_ref[:, 0].astype(jnp.float32)
+        # recompute the block selection in-kernel (bit-identical to the
+        # jb operand that addressed the DMA) so lo/stop never round-trip
+        jb, lo = _select_tile(running, stop, W)
+        t = _fenwick_tile(blk_acc[...], W)
+        R = _descent_tile(t, stop, lo, W)
+        out_ref[:, 0] = jb * W + R
+
+
+def walk_pallas(
+    wp: jnp.ndarray,
+    running: jnp.ndarray,
+    u: jnp.ndarray,
+    rows: jnp.ndarray,
+    jb: jnp.ndarray,
+    W: int,
+    tb: int,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Tiled pass B: draw sample i from row ``rows[i]`` of the prebuilt
+    ``(wp, running)`` pair, re-reading only W-block ``jb[i]``.
+
+    ``rows``/``jb``/``u`` all have length Bt (a multiple of ``tb``); the
+    ``rows`` indirection lets S draws per distribution share one kernel
+    launch (multi-draw tiles ``arange(B)`` S times).  ``jb`` must be the
+    block-level search result for (rows, u) — it is consumed ONLY by the
+    BlockSpec index_map (the DMA address); the selection arithmetic is
+    recomputed in-kernel from the fetched running rows.
+    """
+    interpret = runtime.resolve_interpret(interpret)
+    Bt = u.shape[0]
+    nb = running.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Bt // tb, tb),
+        in_specs=[
+            pl.BlockSpec(
+                (1, W), lambda i, r, rows_ref, jb_ref: (
+                    rows_ref[i * tb + r], jb_ref[i * tb + r]
+                )
+            ),
+            pl.BlockSpec(
+                (1, nb), lambda i, r, rows_ref, jb_ref: (rows_ref[i * tb + r], 0)
+            ),
+            pl.BlockSpec((tb, 1), lambda i, r, rows_ref, jb_ref: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, 1), lambda i, r, rows_ref, jb_ref: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((tb, W), jnp.float32),
+            pltpu.VMEM((tb, nb), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_walk_kernel, W=W, TB=tb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Bt, 1), jnp.int32),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        rows.astype(jnp.int32), jb.astype(jnp.int32),
+        wp, running, u.astype(jnp.float32)[:, None],
+    )
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Table-in/table-out halves + fused end-to-end draw (jitted entry points)
+# ---------------------------------------------------------------------------
+
+
+def _build_sums_impl(weights, W: int, tb: int, tk: int, interpret):
     """Pass A as a table-out step: pad, blocksum, running-sum.
 
     Returns ``(wp, running)`` — the padded weights (pass B re-reads the
@@ -151,23 +320,35 @@ def _build_sums_impl(weights, W: int, tb: int, tk: int, interpret: bool):
     return wp, running
 
 
-def _draw_from_sums_impl(wp, running, u, B: int, K: int, W: int, interpret: bool):
-    """Pass B as a table-in step: block-level search on ``running`` then the
-    scalar-prefetch in-block walk over ``wp``.  ``B``/``K`` are the unpadded
-    shape (``u`` has length B)."""
-    Bp, Kp = wp.shape
-    up = jnp.pad(u.astype(jnp.float32), (0, Bp - B))
-    totals = running[:, -1]
-    stop = totals * up
-    nb = Kp // W
-    jb = jnp.clip(jnp.sum(running <= stop[:, None], axis=1), 0, nb - 1)
-    lo = jnp.where(
-        jb > 0,
-        jnp.take_along_axis(running, jnp.maximum(jb - 1, 0)[:, None], axis=1)[:, 0],
-        jnp.zeros_like(stop),
+def _block_search(running_rows, u):
+    """XLA-side block-level search producing the pass-B DMA addresses:
+    the smallest block whose running sum exceeds stop = total * u."""
+    nb = running_rows.shape[1]
+    stop = running_rows[:, -1] * u.astype(jnp.float32)
+    return jnp.clip(
+        jnp.sum(running_rows <= stop[:, None], axis=1).astype(jnp.int32),
+        0, nb - 1,
     )
-    idx = search_pallas(wp, jb, stop, lo, W, interpret=interpret)
-    return jnp.minimum(idx[:B], K - 1)
+
+
+def _draw_from_sums_impl(wp, running, u, B: int, K: int, W: int, tb: int, interpret):
+    """Pass B as a table-in step.  ``u`` is (B,) for one draw per row or
+    (S, B) for S draws per row (the multi-draw decode path); ``B``/``K``
+    are the unpadded shape."""
+    Bp = wp.shape[0]
+    multi = u.ndim == 2
+    S = u.shape[0] if multi else 1
+    uf = u.reshape(-1).astype(jnp.float32)                       # (S*B,)
+    rows = jnp.tile(jnp.arange(B, dtype=jnp.int32), S)
+    Bt = S * B
+    padT = (-Bt) % tb
+    if padT:
+        uf = jnp.pad(uf, (0, padT))
+        rows = jnp.pad(rows, (0, padT))
+    jb = _block_search(running[rows], uf)
+    idx = walk_pallas(wp, running, uf, rows, jb, W, tb, interpret=interpret)
+    idx = jnp.minimum(idx[:Bt], K - 1)
+    return idx.reshape(S, B) if multi else idx
 
 
 @functools.partial(jax.jit, static_argnames=("W", "tb", "tk", "interpret"))
@@ -176,13 +357,13 @@ def build_block_sums_pallas(
     W: int = 32,
     tb: int = 8,
     tk: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Jitted table-out entry point: (B, K) weights -> (wp, running)."""
     return _build_sums_impl(weights, W, tb, tk, interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("B", "K", "W", "interpret"))
+@functools.partial(jax.jit, static_argnames=("B", "K", "W", "tb", "interpret"))
 def sample_from_block_sums_pallas(
     wp: jnp.ndarray,
     running: jnp.ndarray,
@@ -190,10 +371,13 @@ def sample_from_block_sums_pallas(
     B: int,
     K: int,
     W: int = 32,
-    interpret: bool = True,
+    tb: int = 8,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Jitted table-in entry point: draw from prebuilt (wp, running)."""
-    return _draw_from_sums_impl(wp, running, u, B, K, W, interpret)
+    """Jitted table-in entry point: draw from prebuilt (wp, running).
+    ``u`` may be (B,) or (S, B) — the latter runs all S*B walks in one
+    tiled kernel launch."""
+    return _draw_from_sums_impl(wp, running, u, B, K, W, tb, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("W", "tb", "tk", "interpret"))
@@ -203,14 +387,27 @@ def butterfly_sample_pallas(
     W: int = 32,
     tb: int = 8,
     tk: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Draw one index per row of (B, K) weights; u (B,) uniforms in [0,1).
 
-    Pads B to a multiple of ``tb`` and K to a multiple of ``tk`` (zero
-    weights are never selected).  Tile sizes: (tb, tk) VMEM tiles in pass A
-    (tk % W == 0); pass B touches one (1, W) tile per sample.
+    ONE fused pallas_call: each (tb, Kp) weight tile is loaded once and
+    the block-sum/select/walk pipeline runs entirely in VMEM.  Pads B to
+    a multiple of ``tb`` and K to a multiple of ``W`` (zero weights are
+    never selected).  When even a tb=8 row tile would blow the VMEM
+    budget (vocab-scale K), the draw transparently takes the two-pass
+    route — pass A streamed in (tb, tk) tiles, tiled pass B — which is
+    formula-identical (``test_table_in_matches_fused`` pins this).
     """
     B, K = weights.shape
-    wp, running = _build_sums_impl(weights, W, tb, tk, interpret)
-    return _draw_from_sums_impl(wp, running, u, B, K, W, interpret)
+    padK = (-K) % W
+    Kp = K + padK
+    tb = _fused_tb(tb, Kp)
+    if tb * Kp * 4 > _FUSED_TILE_BYTES:
+        wp, running = _build_sums_impl(weights, W, tb, tk, interpret)
+        return _draw_from_sums_impl(wp, running, u, B, K, W, tb, interpret)
+    padB = (-B) % tb
+    wp = jnp.pad(weights, ((0, padB), (0, padK)))
+    up = jnp.pad(u.astype(jnp.float32), (0, padB), constant_values=0.5)
+    idx = fused_draw_pallas(wp, up, W, tb, interpret=interpret)
+    return jnp.minimum(idx[:B], K - 1)

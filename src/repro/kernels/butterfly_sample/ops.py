@@ -2,30 +2,33 @@
 
 Three entry points:
 
-* ``butterfly_sample``            — the fused end-to-end draw (pass A + B)
+* ``butterfly_sample``            — the fused end-to-end draw: ONE
+                                    ``pallas_call`` over a ``(B//tb,)``
+                                    tiled grid with in-kernel block
+                                    selection (DESIGN.md §3)
 * ``build_block_sums``            — table-out: pass A only, returns the
                                     (padded weights, running block sums)
                                     pair that IS the kernel strategy's
                                     reusable state
-* ``butterfly_sample_from_sums``  — table-in: pass B only, draws from a
-                                    prebuilt pair (what a ``kernel``-variant
+* ``butterfly_sample_from_sums``  — table-in: tiled pass B only, draws
+                                    from a prebuilt pair (what a
+                                    ``kernel``-variant
                                     ``repro.sampling.Categorical`` carries
-                                    as pytree leaves)
+                                    as pytree leaves); accepts (S, B)
+                                    uniforms for multi-draw in one launch
+
+``interpret=None`` everywhere resolves through
+:func:`repro.kernels.runtime.default_interpret` — the same backend
+detection the low-level ``*_pallas`` entry points now apply themselves.
 """
 
 from __future__ import annotations
-
-import jax
 
 from repro.kernels.butterfly_sample.kernel import (
     build_block_sums_pallas,
     butterfly_sample_pallas,
     sample_from_block_sums_pallas,
 )
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def butterfly_sample(
@@ -36,13 +39,11 @@ def butterfly_sample(
     tk: int = 512,
     interpret: bool | None = None,
 ):
-    """Fused two-pass categorical draw: (B, K) weights, (B,) uniforms -> (B,).
+    """Fused tiled categorical draw: (B, K) weights, (B,) uniforms -> (B,).
 
-    HBM-optimal on TPU: reads weights once + B*W re-read, writes only
-    B*K/W block sums (see kernel.py docstring).
+    HBM-optimal on TPU: reads each weight tile once, writes only the B
+    drawn indices (see kernel.py docstring).
     """
-    if interpret is None:
-        interpret = _default_interpret()
     return butterfly_sample_pallas(weights, u, W=W, tb=tb, tk=tk, interpret=interpret)
 
 
@@ -59,8 +60,6 @@ def build_block_sums(
     ``butterfly_sample_from_sums`` without re-reading the full weight
     matrix through pass A.
     """
-    if interpret is None:
-        interpret = _default_interpret()
     return build_block_sums_pallas(weights, W=W, tb=tb, tk=tk, interpret=interpret)
 
 
@@ -70,15 +69,15 @@ def butterfly_sample_from_sums(
     u,
     K: int,
     W: int = 32,
+    tb: int = 8,
     interpret: bool | None = None,
 ):
     """Pass B alone: draw from prebuilt ``(wp, running)`` state.
 
-    ``u`` is the unpadded (B,) uniform vector; ``K`` the unpadded category
-    count (both smaller than the padded state shapes).
+    ``u`` is the unpadded (B,) uniform vector — or (S, B) for S draws per
+    distribution, all walked in one tiled kernel launch (the multi-draw
+    decode path).  ``K`` is the unpadded category count.
     """
-    if interpret is None:
-        interpret = _default_interpret()
     return sample_from_block_sums_pallas(
-        wp, running, u, B=u.shape[0], K=K, W=W, interpret=interpret
+        wp, running, u, B=u.shape[-1], K=K, W=W, tb=tb, interpret=interpret
     )

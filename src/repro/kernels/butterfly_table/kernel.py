@@ -69,13 +69,16 @@ def _table_kernel(w_ref, out_ref, carry_ref, *, W: int):
 
 @functools.partial(jax.jit, static_argnames=("W", "interpret"))
 def butterfly_table_pallas(
-    weights: jnp.ndarray, W: int = 32, interpret: bool = True
+    weights: jnp.ndarray, W: int = 32, interpret: bool | None = None
 ) -> jnp.ndarray:
     """Build the butterfly table for (B, K) weights; B, K multiples of W.
 
     Returns (B, K) laid out so that the (g, c) block equals the paper's
     W x W table block (row W-1 = running per-sample prefix).
     """
+    from repro.kernels import runtime
+
+    interpret = runtime.resolve_interpret(interpret)
     B, K = weights.shape
     assert B % W == 0 and K % W == 0, (B, K, W)
     G, nb = B // W, K // W

@@ -2,21 +2,15 @@
 
 from __future__ import annotations
 
-import jax
-
 from repro.kernels.butterfly_table.kernel import butterfly_table_pallas
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def butterfly_table(weights, W: int = 32, interpret: bool | None = None):
     """Butterfly-patterned partial-sums table for (B, K) weights.
 
     B and K must be multiples of W (use ``repro.core.pad_to_multiple``).
-    Runs the Pallas kernel (interpret mode off-TPU).
+    ``interpret=None`` resolves through
+    :func:`repro.kernels.runtime.default_interpret` (compile on TPU,
+    emulate elsewhere).
     """
-    if interpret is None:
-        interpret = _default_interpret()
     return butterfly_table_pallas(weights, W=W, interpret=interpret)

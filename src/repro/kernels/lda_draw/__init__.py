@@ -1,3 +1,13 @@
-from repro.kernels.lda_draw.ops import lda_draw
+from repro.kernels.lda_draw.ops import (
+    lda_build_running,
+    lda_draw,
+    lda_draw_factored,
+    lda_draw_from_running,
+)
 
-__all__ = ["lda_draw"]
+__all__ = [
+    "lda_build_running",
+    "lda_draw",
+    "lda_draw_factored",
+    "lda_draw_from_running",
+]

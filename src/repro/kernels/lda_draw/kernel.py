@@ -1,21 +1,37 @@
-"""Fused LDA z-draw kernel — the paper's inner loop as ONE Pallas kernel.
+"""Fused LDA z-draw kernels — the paper's inner loop without materialized weights.
 
 The paper's Algorithm 8 *fuses* the theta-phi product with the butterfly
 table construction so the (B, K) relative-probability table never round-trips
-through main memory.  This kernel is the TPU-native statement of that fusion:
+through main memory.  These kernels are the TPU-native statement of that
+fusion (DESIGN.md §4):
 
-  * the data-dependent fetch of ``phi[w[m], :]`` — the memory-coalescing
-    problem the paper's warp-transposed loads solve — becomes a
-    **scalar-prefetch-driven BlockSpec index_map**: the word id selects the
-    phi row, and the Pallas pipeline DMAs exactly that row into VMEM
-    (contiguous, double-buffered — the hardware-native "coalesced" gather);
+  * the data-dependent fetches of ``theta[doc[s], :]`` and ``phi[w[s], :]``
+    — the memory-coalescing problem the paper's warp-transposed loads
+    solve — become **scalar-prefetch-driven BlockSpec index_maps**: the
+    doc id selects the theta row and the word id selects the phi row, and
+    the Pallas pipeline DMAs exactly those rows into VMEM (contiguous,
+    double-buffered — the hardware-native "coalesced" gather).  Theta is
+    never ``jnp.repeat``-ed to one row per word position;
   * theta row x phi row -> weights, per-W-block sums, block selection and
     the in-block dyadic walk all happen in registers/VMEM;
   * HBM traffic per sample: theta row (K) + one phi row (K) + nothing else.
     The unfused pipeline (materialize weights, then sample) pays >= 3K.
 
-Grid is (B,): one sample per step; K (padded to a multiple of W) must fit
-VMEM — true by construction for LDA (K <= ~1k topics).
+Tiled grid (DESIGN.md §3): ``grid = (B//tb, tb)``.  The inner dimension
+streams one (theta row, phi row) pair per sample into a (tb, Kp) VMEM
+product tile; the last inner step runs the whole fused draw — block sums,
+in-kernel block selection, vectorized (tb, W) dyadic walk — for the tile
+at once.  Kp (K padded to a multiple of W) must fit VMEM alongside the
+tile — true by construction for LDA (K <= ~1k topics).
+
+Three entry points:
+  * ``lda_fused_draw_pallas``   — factored one-``pallas_call`` draw
+    (theta (C, K), phi (V, K), per-sample doc/word ids, uniforms)
+  * ``lda_blocksums_pallas``    — factored pass A: running per-W-block
+    sums of the theta-phi products, (B, K//W), never forming (B, K)
+    (the ``lda_kernel`` Categorical variant's table build)
+  * ``lda_walk_pallas``         — factored pass B: re-reads only the
+    selected W-block of each sample's theta/phi rows (table-in draw)
 """
 
 from __future__ import annotations
@@ -24,71 +40,301 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-
-def _draw_kernel(words_ref, theta_ref, phi_row_ref, u_ref, out_ref, *, W: int, K: int):
-    log2w = int(np.log2(W))
-    nb = K // W
-    # fused theta-phi product (the paper's line 16), fp32 accumulation
-    w = theta_ref[0, :].astype(jnp.float32) * phi_row_ref[0, :].astype(jnp.float32)
-    blocks = w.reshape(nb, W)
-    running = jnp.cumsum(blocks.sum(axis=1))
-    total = running[nb - 1]
-    stop = total * u_ref[0, 0]
-    jb = jnp.clip(jnp.sum(running <= stop).astype(jnp.int32), 0, nb - 1)
-    lo = jnp.where(jb > 0, running[jnp.maximum(jb - 1, 0)], 0.0)
-    sel = jax.lax.dynamic_index_in_dim(blocks, jb, axis=0, keepdims=False)  # (W,)
-    # in-register dyadic table (TPU-adapted butterfly) + add-only descent
-    t = sel
-    for b in range(log2w):
-        bit = 1 << b
-        t2 = t.reshape(W // (2 * bit), 2 * bit)
-        t2 = t2.at[:, 2 * bit - 1].add(t2[:, bit - 1])
-        t = t2.reshape(W)
-    acc = lo
-    R = jnp.int32(0)
-    for b in range(log2w - 1, -1, -1):
-        bit = 1 << b
-        y = jax.lax.dynamic_index_in_dim(t, R + (bit - 1), keepdims=False)
-        mid = acc + y
-        go = stop >= mid
-        acc = jnp.where(go, mid, acc)
-        R = jnp.where(go, R + bit, R)
-    out_ref[0, 0] = jb * W + R
+from repro.kernels import runtime
+from repro.kernels.butterfly_sample.kernel import (
+    _COMPILER_PARAMS,
+    _descent_tile,
+    _draw_tile,
+    _fenwick_tile,
+    _select_tile,
+)
 
 
-@functools.partial(jax.jit, static_argnames=("W", "interpret"))
+# ---------------------------------------------------------------------------
+# Fused factored draw: ONE pallas_call over (B//tb, tb)
+# ---------------------------------------------------------------------------
+
+
+def _fused_factored_kernel(
+    docs_ref, words_ref, theta_ref, phi_ref, u_ref, out_ref, w_acc, *, W: int, TB: int
+):
+    r = pl.program_id(1)
+    # fused theta-phi product (the paper's line 16), fp32 accumulation;
+    # one row of the (TB, Kp) product tile per inner grid step
+    w_acc[r, :] = theta_ref[0, :].astype(jnp.float32) * phi_ref[0, :].astype(
+        jnp.float32
+    )
+
+    @pl.when(r == TB - 1)
+    def _draw():
+        out_ref[:, 0] = _draw_tile(w_acc[...], u_ref[:, 0].astype(jnp.float32), W)
+
+
+def lda_fused_draw_pallas(
+    theta: jnp.ndarray,     # (C, Kp) document-topic weights
+    phi: jnp.ndarray,       # (V, Kp) word-topic weights
+    doc_ids: jnp.ndarray,   # (Bt,) int32 theta row per sample
+    words: jnp.ndarray,     # (Bt,) int32 phi row per sample
+    u: jnp.ndarray,         # (Bt,) uniforms
+    W: int,
+    tb: int,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """One-kernel fused draw; Bt % tb == 0, Kp % W == 0 (pad first)."""
+    interpret = runtime.resolve_interpret(interpret)
+    Bt = u.shape[0]
+    Kp = theta.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Bt // tb, tb),
+        in_specs=[
+            pl.BlockSpec(
+                (1, Kp), lambda i, r, docs_ref, words_ref: (docs_ref[i * tb + r], 0)
+            ),
+            pl.BlockSpec(
+                (1, Kp), lambda i, r, docs_ref, words_ref: (words_ref[i * tb + r], 0)
+            ),
+            pl.BlockSpec((tb, 1), lambda i, r, docs_ref, words_ref: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, 1), lambda i, r, docs_ref, words_ref: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((tb, Kp), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_fused_factored_kernel, W=W, TB=tb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Bt, 1), jnp.int32),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        doc_ids.astype(jnp.int32), words.astype(jnp.int32),
+        theta, phi, u.astype(jnp.float32)[:, None],
+    )
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Factored pass A: running block sums straight from the factors
+# ---------------------------------------------------------------------------
+
+
+def _factored_blocksum_kernel(
+    docs_ref, words_ref, theta_ref, phi_ref, out_ref, *, W: int
+):
+    r = pl.program_id(1)
+    w = theta_ref[0, :].astype(jnp.float32) * phi_ref[0, :].astype(jnp.float32)
+    nb = w.shape[0] // W
+    out_ref[r, :] = jnp.cumsum(w.reshape(nb, W).sum(axis=-1))
+
+
+def lda_blocksums_pallas(
+    theta: jnp.ndarray,
+    phi: jnp.ndarray,
+    doc_ids: jnp.ndarray,
+    words: jnp.ndarray,
+    W: int,
+    tb: int,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Factored pass A: (Bt, Kp//W) *running* block sums of theta*phi —
+    the (C*N, K) weight tensor never exists."""
+    interpret = runtime.resolve_interpret(interpret)
+    Bt = doc_ids.shape[0]
+    Kp = theta.shape[1]
+    nb = Kp // W
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Bt // tb, tb),
+        in_specs=[
+            pl.BlockSpec(
+                (1, Kp), lambda i, r, docs_ref, words_ref: (docs_ref[i * tb + r], 0)
+            ),
+            pl.BlockSpec(
+                (1, Kp), lambda i, r, docs_ref, words_ref: (words_ref[i * tb + r], 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((tb, nb), lambda i, r, docs_ref, words_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_factored_blocksum_kernel, W=W),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Bt, nb), jnp.float32),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(doc_ids.astype(jnp.int32), words.astype(jnp.int32), theta, phi)
+
+
+# ---------------------------------------------------------------------------
+# Factored pass B: walk only the selected W-block of each sample's rows
+# ---------------------------------------------------------------------------
+
+
+def _factored_walk_kernel(
+    rows_ref, docs_ref, words_ref, jb_ref,
+    theta_ref, phi_ref, run_ref, u_ref, out_ref, blk_acc, run_acc,
+    *, W: int, TB: int,
+):
+    r = pl.program_id(1)
+    blk_acc[r, :] = theta_ref[0, :].astype(jnp.float32) * phi_ref[0, :].astype(
+        jnp.float32
+    )
+    run_acc[r, :] = run_ref[0, :].astype(jnp.float32)
+
+    @pl.when(r == TB - 1)
+    def _walk():
+        running = run_acc[...]
+        stop = running[:, -1] * u_ref[:, 0].astype(jnp.float32)
+        jb, lo = _select_tile(running, stop, W)
+        t = _fenwick_tile(blk_acc[...], W)
+        R = _descent_tile(t, stop, lo, W)
+        out_ref[:, 0] = jb * W + R
+
+
+def lda_walk_pallas(
+    theta: jnp.ndarray,
+    phi: jnp.ndarray,
+    running: jnp.ndarray,   # (B, nb) running block sums (factored pass A)
+    u: jnp.ndarray,         # (Bt,) uniforms
+    rows: jnp.ndarray,      # (Bt,) sample index per draw (multi-draw tiles it)
+    doc_ids: jnp.ndarray,   # (Bt,) theta row per draw (already rows-gathered)
+    words: jnp.ndarray,     # (Bt,) phi row per draw (already rows-gathered)
+    jb: jnp.ndarray,        # (Bt,) selected block per draw (DMA address only)
+    W: int,
+    tb: int,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Factored table-in draw: HBM traffic 2*W (+ nb) per sample."""
+    interpret = runtime.resolve_interpret(interpret)
+    Bt = u.shape[0]
+    nb = running.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(Bt // tb, tb),
+        in_specs=[
+            pl.BlockSpec(
+                (1, W), lambda i, r, rows_ref, docs_ref, words_ref, jb_ref: (
+                    docs_ref[i * tb + r], jb_ref[i * tb + r]
+                )
+            ),
+            pl.BlockSpec(
+                (1, W), lambda i, r, rows_ref, docs_ref, words_ref, jb_ref: (
+                    words_ref[i * tb + r], jb_ref[i * tb + r]
+                )
+            ),
+            pl.BlockSpec(
+                (1, nb), lambda i, r, rows_ref, docs_ref, words_ref, jb_ref: (
+                    rows_ref[i * tb + r], 0
+                )
+            ),
+            pl.BlockSpec(
+                (tb, 1), lambda i, r, rows_ref, docs_ref, words_ref, jb_ref: (i, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (tb, 1), lambda i, r, rows_ref, docs_ref, words_ref, jb_ref: (i, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((tb, W), jnp.float32),
+            pltpu.VMEM((tb, nb), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_factored_walk_kernel, W=W, TB=tb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Bt, 1), jnp.int32),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        rows.astype(jnp.int32), doc_ids.astype(jnp.int32),
+        words.astype(jnp.int32), jb.astype(jnp.int32),
+        theta, phi, running, u.astype(jnp.float32)[:, None],
+    )
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Jitted entry points (padding + legacy per-sample-theta signature)
+# ---------------------------------------------------------------------------
+
+
+def _pad_k(x, W: int):
+    padK = (-x.shape[1]) % W
+    return jnp.pad(x, ((0, 0), (0, padK))) if padK else x
+
+
+def _lda_draw_impl(theta, phi, doc_ids, words, u, W: int, tb: int, interpret):
+    from repro.kernels.butterfly_sample.kernel import (
+        _block_search,
+        _fused_tb,
+        _FUSED_TILE_BYTES,
+    )
+
+    K = theta.shape[1]
+    B = u.shape[0]
+    thetap = _pad_k(theta, W)
+    phip = _pad_k(phi, W)
+    Kp = thetap.shape[1]
+    tb = _fused_tb(tb, Kp)
+    padB = (-B) % tb
+    if padB:
+        doc_ids = jnp.pad(doc_ids, (0, padB))
+        words = jnp.pad(words, (0, padB))
+        u = jnp.pad(u.astype(jnp.float32), (0, padB), constant_values=0.5)
+    if tb * Kp * 4 > _FUSED_TILE_BYTES:
+        # the (tb, Kp) product tile would blow VMEM: take the factored
+        # two-pass route (pass A streams factor rows, pass B touches one
+        # W-block of each) — formula-identical to the fused kernel
+        running = lda_blocksums_pallas(
+            thetap, phip, doc_ids, words, W=W, tb=tb, interpret=interpret
+        )
+        jb = _block_search(running, u)
+        rows = jnp.arange(u.shape[0], dtype=jnp.int32)
+        idx = lda_walk_pallas(
+            thetap, phip, running, u, rows, doc_ids, words, jb,
+            W=W, tb=tb, interpret=interpret,
+        )
+    else:
+        idx = lda_fused_draw_pallas(
+            thetap, phip, doc_ids, words, u, W=W, tb=tb, interpret=interpret
+        )
+    return jnp.minimum(idx[:B], K - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("W", "tb", "interpret"))
+def lda_draw_docs_pallas(
+    theta: jnp.ndarray,     # (C, K) per-document topic weights
+    phi: jnp.ndarray,       # (V, K) word-topic weights
+    doc_ids: jnp.ndarray,   # (B,) int32 document id per word position
+    words: jnp.ndarray,     # (B,) int32 word ids
+    u: jnp.ndarray,         # (B,) uniforms
+    W: int = 32,
+    tb: int = 8,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Factored fused draw: theta rows selected by ``doc_ids`` through the
+    BlockSpec index_map — no ``jnp.repeat`` row expansion anywhere."""
+    return _lda_draw_impl(theta, phi, doc_ids, words, u, W, tb, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("W", "tb", "interpret"))
 def lda_draw_pallas(
     theta: jnp.ndarray,   # (B, K) per-sample topic weights
     phi: jnp.ndarray,     # (V, K) word-topic weights
     words: jnp.ndarray,   # (B,) int32 word ids
     u: jnp.ndarray,       # (B,) uniforms
     W: int = 32,
-    interpret: bool = True,
+    tb: int = 8,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
-    B, K = theta.shape
-    padK = (-K) % W
-    if padK:
-        theta = jnp.pad(theta, ((0, 0), (0, padK)))
-        phi = jnp.pad(phi, ((0, 0), (0, padK)))
-    Kp = K + padK
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(B,),
-        in_specs=[
-            pl.BlockSpec((1, Kp), lambda b, words_ref: (b, 0)),          # theta row
-            pl.BlockSpec((1, Kp), lambda b, words_ref: (words_ref[b], 0)),  # phi row!
-            pl.BlockSpec((1, 1), lambda b, words_ref: (b, 0)),           # u
-        ],
-        out_specs=pl.BlockSpec((1, 1), lambda b, words_ref: (b, 0)),
-    )
-    out = pl.pallas_call(
-        functools.partial(_draw_kernel, W=W, K=Kp),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
-        interpret=interpret,
-    )(words.astype(jnp.int32), theta, phi, u.astype(jnp.float32)[:, None])
-    return jnp.minimum(out[:, 0], K - 1)
+    """Legacy signature: one theta row per sample (doc_ids = arange)."""
+    B = theta.shape[0]
+    doc_ids = jnp.arange(B, dtype=jnp.int32)
+    return _lda_draw_impl(theta, phi, doc_ids, words, u, W, tb, interpret)

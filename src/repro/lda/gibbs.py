@@ -5,34 +5,46 @@ One sweep =
      probabilities ``theta[m,k] * phi[w[m,i],k]`` and draw a topic.  This
      is the paper's hot loop; the sampling strategy is pluggable
      (``auto`` — the default, resolved per workload by ``repro.autotune``
-     — or a fixed ``butterfly`` / ``fenwick`` / ``two_level`` / ``kernel``
-     / ``lda_kernel`` / ``prefix`` / ``gumbel``).
+     over the *factored* candidate set — or a fixed ``lda_kernel`` /
+     ``butterfly`` / ``fenwick`` / ``two_level`` / ``kernel`` / ``prefix``
+     / ``gumbel``).
   2. UPDATE THETA — theta[m,:] ~ Dirichlet(alpha + doc-topic counts).
   3. UPDATE PHI   — phi[:,k]  ~ Dirichlet(beta + word-topic counts).
 
-Sampling goes through the distribution-object API: ``draw_z`` plans the
-(chunk*maxN, K) workload once (``repro.sampling.plan`` memoizes, so the
-autotune resolution and compiled draw are shared across every sweep) and
-holds one built ``Categorical`` per document chunk — the paper's exact
-build-the-table-then-search pattern.  Because theta/phi are resampled
-every sweep the per-chunk distributions are *refreshed*
-(``dist.refreshed(new_weights)``) rather than rebuilt from scratch
-through a fresh dispatch: same variant, same W, same compiled search,
-new table leaves.  Pass a dict as ``dists=`` to keep the built
-distributions across sweeps (``gibbs_step(..., dists=cache)``); the last
-sweep's tables then remain available for posterior draws.
+The default sweep is FUSED and ZERO-MATERIALIZATION: ``gibbs_step``
+compiles the whole sweep (z-draw + counts + theta/phi resample) as one
+jitted function whose z-draw is a single ``lax.scan`` over document
+chunks — no Python chunk loop, no per-chunk dispatch — with the old
+``theta``/``z`` buffers donated to XLA on accelerator backends (they are
+dead after the draw, so the sweep updates in place).  When the strategy
+resolves to the factored ``lda_kernel`` path (the autotune default for
+this workload), each chunk's draw consumes the (theta, phi) factors
+directly — one fused Pallas kernel on TPU, the pure-XLA twin elsewhere —
+and the ``(chunk*maxN, K)`` weight tensor NEVER exists (DESIGN.md §4).
+Non-factored strategies materialize only one chunk's weights at a time
+inside the scan body.
 
-All phases are jitted; the z-draw chunks over documents so the
-(chunk, maxN, K) weight tensor stays within memory at any corpus scale.
-For the multi-host layout, documents shard over the ``data`` mesh axis and
-the word-topic count matrix is combined with a psum (see
+Passing ``dists=`` (a mutable mapping chunk-start -> ``Categorical``)
+selects the legacy per-chunk Python loop instead: each chunk's built
+distribution is kept across sweeps and *refreshed* in place —
+``refresh_from_factors`` for the factored variant, ``refreshed`` for the
+flat-table variants — so the last sweep's tables remain available for
+posterior draws.
+
+For the multi-host layout, documents shard over the ``data`` mesh axis
+and the word-topic count matrix is combined with a psum (see
 ``repro.launch.train --app lda``).
+
+NOTE on donation: on non-CPU backends the fused sweep donates the
+incoming ``state.theta`` and ``state.z`` buffers — after ``gibbs_step``
+returns, the *old* state's theta/z must not be read again (rebind the
+returned state, as every caller here does).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Dict, NamedTuple, Optional
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -65,39 +77,142 @@ def _chunk_weights(theta_c, phi, docs_c):
     return theta_c[:, None, :] * phi[docs_c]                # (C, N, K)
 
 
-@functools.partial(jax.jit, static_argnames=("W",))
-def _lda_kernel_chunk(theta_c, phi, docs_c, key, W: int):
-    """Fused Pallas kernel path: the (C*N, K) weights never materialize."""
-    from repro.kernels.lda_draw import lda_draw
+def _chunk_plan(B: int, K: int, method: str, W, dtype: str) -> sampling.SamplerPlan:
+    """Plan a (B, K) chunk draw over the *factored* candidate set — the
+    gibbs workload always arrives as a theta-phi product, so autotune may
+    pick the fused ``lda_kernel`` path."""
+    # gumbel consumes the PRNG key directly; every other strategy draws
+    # from key-derived uniforms, so auto resolves over the u-capable set
+    has_key = method in ("gumbel", "alias")
+    return sampling.plan(
+        (B, K), method=method, W=W, dtype=dtype, has_key=has_key, factored=True
+    )
 
+
+def _draw_chunk(theta_c, phi, docs_c, key, method: str, W) -> jnp.ndarray:
+    """Draw z for one (C, N) chunk — the scan body.  Factored strategies
+    never materialize the (C*N, K) weights; flat strategies materialize
+    one chunk's worth inside this (fused, jitted) body only."""
     C, N = docs_c.shape
-    u = jax.random.uniform(key, (C * N,), dtype=jnp.float32)
-    theta_flat = jnp.repeat(theta_c, N, axis=0)              # (C*N, K)
-    idx = lda_draw(theta_flat, phi, docs_c.reshape(-1), u, W=W)
-    return idx.reshape(C, N)
+    K = theta_c.shape[-1]
+    words = docs_c.reshape(-1)
+    p = _chunk_plan(C * N, K, method, W, str(theta_c.dtype))
+    if p.method in sampling.FACTORED_VARIANTS:
+        from repro.kernels.lda_draw import lda_draw_factored
+
+        doc_ids = jnp.arange(C * N, dtype=jnp.int32) // N
+        u = jax.random.uniform(key, (C * N,), dtype=jnp.float32)
+        idx = lda_draw_factored(
+            theta_c, phi, doc_ids, words, u, W=p.W, tb=p.tb or 8
+        )
+        return idx.reshape(C, N)
+    flat = _chunk_weights(theta_c, phi, docs_c).reshape(C * N, K)
+    dist = p.build(flat)
+    return p.draw(dist, key=key).reshape(C, N)
+
+
+def _scan_draw(theta, phi, docs, key, method: str, W, chunk: int) -> jnp.ndarray:
+    """The zero-materialization chunked z-draw: ONE ``lax.scan`` over
+    document chunks (vs. the old Python loop with a host round-trip and a
+    full (C, N, K) weight build per chunk)."""
+    M, maxN = docs.shape
+    K = theta.shape[-1]
+    chunk = min(chunk, M) if M else chunk
+    nc = max(1, -(-M // chunk))
+    pad = nc * chunk - M
+    if pad:
+        docs = jnp.pad(docs, ((0, pad), (0, 0)))
+        theta = jnp.pad(theta, ((0, pad), (0, 0)))
+    # same key schedule as the legacy per-chunk loop (bit-compatible)
+    keys = jax.random.split(key, nc + 1)[:nc]
+    xs = (
+        theta.reshape(nc, chunk, K),
+        docs.reshape(nc, chunk, maxN),
+        keys,
+    )
+
+    def body(carry, x):
+        theta_c, docs_c, k = x
+        return carry, _draw_chunk(theta_c, phi, docs_c, k, method, W)
+
+    _, zs = jax.lax.scan(body, None, xs)
+    return zs.reshape(nc * chunk, maxN)[:M]
+
+
+# jitted sweep / draw executables, keyed by the static draw config.
+# donate_argnums differs per backend (CPU ignores donation), hence the
+# explicit cache instead of a bare @jax.jit.
+_JIT_CACHE: Dict[Tuple, Callable] = {}
+
+
+def _donate() -> bool:
+    return jax.default_backend() != "cpu"
+
+
+def _scan_draw_jit(method: str, W, chunk: int) -> Callable:
+    # NO donation here: draw_z is public and returns only z, so the
+    # caller's state.theta must stay readable.  Buffer donation happens
+    # one level up, in the fused sweep, which hands back a full
+    # replacement LDAState.
+    key = ("draw", method, W, chunk)
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(
+            functools.partial(_scan_draw, method=method, W=W, chunk=chunk)
+        )
+        _JIT_CACHE[key] = fn
+    return fn
+
+
+def _sweep_jit(method: str, W, chunk: int, K: int, V: int) -> Callable:
+    donate = _donate()
+    key = ("sweep", method, W, chunk, K, V, donate)
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+
+        def impl(theta, phi, z_old, rng, step, docs, mask, alpha, beta):
+            del z_old  # donated: its buffer backs the new z
+            z = _scan_draw(theta, phi, docs, rng, method, W, chunk)
+            doc_topic, word_topic = _counts(z, docs, mask, K, V)
+            k_theta, k_phi, k_next = jax.random.split(rng, 3)
+            new_theta = _update_theta(k_theta, doc_topic, alpha)
+            new_phi = _update_phi(k_phi, word_topic, beta)
+            return LDAState(
+                theta=new_theta, phi=new_phi, z=z, key=k_next, step=step + 1
+            )
+
+        fn = jax.jit(impl, donate_argnums=(0, 2) if donate else ())
+        _JIT_CACHE[key] = fn
+    return fn
 
 
 def _draw_z_chunk(
     theta_c, phi, docs_c, key, method="auto", W=None,
     dist: Optional[sampling.Categorical] = None,
 ):
-    """Draw z for a (C, N) chunk of documents. Returns ((C, N) topics, dist).
+    """Legacy per-chunk draw with cross-sweep distribution reuse.
+    Returns ((C, N) topics, dist).
 
     Builds (or refreshes) the chunk's ``Categorical`` from this sweep's
-    theta/phi products and draws through the memoized plan's compiled
-    path.  ``dist`` is the chunk's distribution from the previous sweep,
-    if the caller held one."""
+    theta/phi and draws through the memoized plan's compiled path.
+    Factored variants refresh via ``refresh_from_factors`` — new factor
+    leaves, no (C*N, K) weights; flat variants via ``refreshed``."""
     C, N = docs_c.shape
     K = theta_c.shape[-1]
-    if method == "lda_kernel":
-        return _lda_kernel_chunk(theta_c, phi, docs_c, key, W=W or 32), None
+    p = _chunk_plan(C * N, K, method, W, str(theta_c.dtype))
+    if p.method in sampling.FACTORED_VARIANTS:
+        words = docs_c.reshape(-1)
+        if (
+            dist is not None
+            and dist.method == p.method
+            and dist.W == p.W
+            and dist.shape == (C * N, K)
+        ):
+            dist = dist.refresh_from_factors(theta_c, phi, words)
+        else:
+            dist = p.build_from_factors(theta_c, phi, words)
+        return p.draw(dist, key=key).reshape(C, N), dist
     flat = _chunk_weights(theta_c, phi, docs_c).reshape(C * N, K)
-    # gumbel consumes the PRNG key directly; every other strategy draws
-    # from key-derived uniforms, so auto resolves over the u-capable set
-    has_key = method in ("gumbel", "alias")
-    p = sampling.plan(
-        flat.shape, method=method, W=W, dtype=str(flat.dtype), has_key=has_key
-    )
     if (
         dist is not None
         and dist.method == p.method
@@ -123,10 +238,20 @@ def draw_z(
 ) -> jnp.ndarray:
     """Chunked z-draw over all documents.
 
+    Default (``dists=None``): one jitted ``lax.scan`` over chunks — the
+    zero-materialization path.  (No buffer donation here: ``state``
+    remains fully readable after the call; the donating path is the
+    fused sweep in ``gibbs_step``, which returns a replacement state.)
+
     ``dists``: optional mutable mapping chunk-start -> ``Categorical``.
-    When provided, each chunk's built distribution is kept there across
-    sweeps and refreshed in place (the paper's reuse pattern); when
-    ``None`` the distributions are ephemeral."""
+    When provided, the legacy Python chunk loop runs instead and each
+    chunk's built distribution is kept there across sweeps and refreshed
+    in place (the paper's reuse pattern), at the cost of materializing
+    flat weights for the non-factored strategies."""
+    if dists is None:
+        return _scan_draw_jit(method, W, chunk)(
+            state.theta, state.phi, docs, state.key
+        )
     M, maxN = docs.shape
     keys = jax.random.split(state.key, (M + chunk - 1) // chunk + 1)
     outs = []
@@ -139,9 +264,9 @@ def draw_z(
             keys[ci],
             method=method,
             W=W,
-            dist=None if dists is None else dists.get(start),
+            dist=dists.get(start),
         )
-        if dists is not None and dist is not None:
+        if dist is not None:
             dists[start] = dist
         outs.append(idx)
     return jnp.concatenate(outs, axis=0)
@@ -181,13 +306,20 @@ def gibbs_step(
 ) -> LDAState:
     """One full uncollapsed Gibbs sweep.
 
-    Pass the same dict as ``dists=`` on every call to hold the per-chunk
-    ``Categorical`` distributions across sweeps (refreshed each sweep
-    from the new theta/phi)."""
+    Default: the fused jitted sweep (scanned z-draw + counts + Dirichlet
+    resamples in one executable; old theta/z buffers donated off-CPU).
+    Pass the same dict as ``dists=`` on every call to instead hold the
+    per-chunk ``Categorical`` distributions across sweeps (refreshed each
+    sweep from the new theta/phi)."""
     docs = jnp.asarray(corpus.docs)
     mask = jnp.asarray(corpus.mask)
     K = state.theta.shape[-1]
     V = state.phi.shape[0]
+    if dists is None:
+        return _sweep_jit(method, W, chunk, K, V)(
+            state.theta, state.phi, state.z, state.key, state.step,
+            docs, mask, jnp.float32(alpha), jnp.float32(beta),
+        )
     z = draw_z(state, docs, method=method, W=W, chunk=chunk, dists=dists)
     doc_topic, word_topic = _counts(z, docs, mask, K, V)
     k_theta, k_phi, k_next = jax.random.split(state.key, 3)

@@ -26,6 +26,7 @@ compatibility shims over this package (byte-identical draws for fixed
 """
 
 from repro.sampling.distribution import (
+    FACTORED_VARIANTS,
     KEY_VARIANTS,
     U_VARIANTS,
     VARIANTS,
@@ -43,6 +44,7 @@ from repro.sampling.plan import (
 
 __all__ = [
     "Categorical",
+    "FACTORED_VARIANTS",
     "KEY_VARIANTS",
     "SamplerPlan",
     "U_VARIANTS",

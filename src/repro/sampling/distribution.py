@@ -28,6 +28,10 @@ Variants and their state leaves:
               ``running`` (B, nb) running block sums
   kernel      ``weights`` (Bp, Kp) padded weights,
               ``running`` (Bp, Kp/W) running block sums (Pallas pass A)
+  lda_kernel  ``theta`` (C, Kp) / ``phi`` (V, Kp) padded factors,
+              ``doc_ids``/``words`` (B,) row selectors,
+              ``running`` (B, Kp/W) factored-pass-A running block sums
+              — the (B, K) weight product never materializes
   gumbel      ``logw``    (B, K) masked log-weights
   alias       ``prob``/``alias``  (B, K) Walker/Vose tables
   ==========  =====================================================
@@ -53,14 +57,22 @@ from repro.core import alias as _alias
 from repro.core import butterfly as _bfly
 
 # every variant a Categorical can carry state for (== repro.core.METHODS
-# minus the "auto" placeholder, which resolves before a build)
+# minus the "auto" placeholder, which resolves before a build).
+# "lda_kernel" is the *factored* variant: its state is the (theta, phi,
+# words, doc_ids) factorization plus factored-pass-A running block sums —
+# the (B, K) weight product never materializes (DESIGN.md §4); build it
+# via :meth:`Categorical.from_factors` / :meth:`refresh_from_factors`.
 VARIANTS = (
-    "prefix", "fenwick", "butterfly", "two_level", "kernel", "gumbel", "alias"
+    "prefix", "fenwick", "butterfly", "two_level", "kernel", "gumbel",
+    "alias", "lda_kernel",
 )
+
+# variants built from a factorization instead of a flat weight matrix
+FACTORED_VARIANTS = ("lda_kernel",)
 
 # u-driven variants draw from a caller-supplied (or key-derived) uniform;
 # key-driven ones consume PRNG state directly
-U_VARIANTS = ("prefix", "fenwick", "butterfly", "two_level", "kernel")
+U_VARIANTS = ("prefix", "fenwick", "butterfly", "two_level", "kernel", "lda_kernel")
 KEY_VARIANTS = ("gumbel", "alias")
 
 # table builds since process start — the "zero rebuilds" witness.  A build
@@ -106,6 +118,11 @@ def _build_state(method: str, weights: jnp.ndarray, W: int) -> Dict[str, Any]:
 
         wp, running = _kops.build_block_sums(weights, W=W)
         return {"weights": wp, "running": running}
+    if method == "lda_kernel":
+        raise ValueError(
+            "the factored 'lda_kernel' variant builds from (theta, phi, "
+            "words) — use Categorical.from_factors / refresh_from_factors"
+        )
     if method == "gumbel":
         wf = _float_like(weights)
         logw = jnp.log(jnp.maximum(wf, jnp.finfo(wf.dtype).tiny))
@@ -129,6 +146,25 @@ def _counted_build(method: str, weights: jnp.ndarray, W: int) -> Dict[str, Any]:
     return _build_state_jit(method, weights, W)
 
 
+def _counted_build_factored(theta, phi, doc_ids, words, W: int, tb: int):
+    """Factored table build (lda_kernel variant): pass A runs straight on
+    the (theta, phi) factors — no (B, K) weight tensor, on any backend."""
+    global _BUILD_COUNT
+    _BUILD_COUNT += 1
+    from repro.kernels.lda_draw import ops as _lops
+
+    thetap, phip, running = _lops.lda_build_running(
+        theta, phi, doc_ids, words, W=W, tb=tb or 8
+    )
+    return {
+        "theta": thetap,
+        "phi": phip,
+        "doc_ids": doc_ids,
+        "words": words,
+        "running": running,
+    }
+
+
 # ---------------------------------------------------------------------------
 # The pytree distribution object
 # ---------------------------------------------------------------------------
@@ -147,6 +183,7 @@ class Categorical:
     W: int
     shape: Tuple[int, int]          # unpadded (B, K)
     state: Dict[str, Any]
+    tb: int = 0                     # draw-side row tile (0 = kernel default)
 
     # -- constructors ------------------------------------------------------
 
@@ -200,13 +237,74 @@ class Categorical:
         return cls.from_weights(weights, method=method, W=W, draws=draws)
 
     @classmethod
-    def _build(cls, weights, method: str, W: int) -> "Categorical":
+    def from_factors(
+        cls,
+        theta,
+        phi,
+        words,
+        doc_ids=None,
+        method: str = "lda_kernel",
+        W: Optional[int] = None,
+        tb: Optional[int] = None,
+    ) -> "Categorical":
+        """Build a factored distribution: sample s draws from the product
+        ``theta[doc_ids[s], :] * phi[words[s], :]``.
+
+        The paper's LDA setting (Alg. 8): the block-sum table is built
+        *directly from the factored form* — the (B, K) flat weight matrix
+        never exists.  ``doc_ids=None`` means one theta row per sample.
+        ``method="auto"`` resolves through a factored-workload plan; if
+        that resolves to a flat-weight variant (tiny K, a measured
+        winner), the product is materialized once and the flat table
+        built — same behavior as ``SamplerPlan.build_from_factors``.
+        """
+        theta = jnp.asarray(theta)
+        phi = jnp.asarray(phi)
+        words = jnp.asarray(words, jnp.int32)
+        B = int(words.shape[0])
+        K = int(theta.shape[1])
+        if doc_ids is None:
+            if theta.shape[0] != B:
+                raise ValueError(
+                    f"doc_ids=None needs one theta row per sample; got "
+                    f"theta {theta.shape} for {B} samples"
+                )
+            doc_ids = jnp.arange(B, dtype=jnp.int32)
+        doc_ids = jnp.asarray(doc_ids, jnp.int32)
+        from repro.sampling.plan import plan
+
+        p = plan(
+            (B, K), method=method, W=W, dtype=str(theta.dtype),
+            has_key=False, factored=True,
+        )
+        if p.method not in FACTORED_VARIANTS:
+            flat = theta[doc_ids] * phi[words]
+            return cls._build(flat, p.method, p.W, tb or p.tb)
+        return cls._build_factored(
+            theta, phi, doc_ids, words, p.method, p.W, tb or p.tb
+        )
+
+    @classmethod
+    def _build(cls, weights, method: str, W: int, tb: int = 0) -> "Categorical":
         weights = jnp.asarray(weights)
         return cls(
             method=method,
             W=int(W),
             shape=(int(weights.shape[0]), int(weights.shape[1])),
             state=_counted_build(method, weights, W),
+            tb=int(tb),
+        )
+
+    @classmethod
+    def _build_factored(
+        cls, theta, phi, doc_ids, words, method: str, W: int, tb: int = 0
+    ) -> "Categorical":
+        return cls(
+            method=method,
+            W=int(W),
+            shape=(int(words.shape[0]), int(theta.shape[1])),
+            state=_counted_build_factored(theta, phi, doc_ids, words, W, tb),
+            tb=int(tb),
         )
 
     def refreshed(self, weights) -> "Categorical":
@@ -216,13 +314,47 @@ class Categorical:
         underlying weights change (an LDA phi resample, an updated unigram
         table), call ``dist.refreshed(new_weights)`` — same variant, same
         W, fresh leaves."""
+        if self.method in FACTORED_VARIANTS:
+            raise ValueError(
+                f"{self.method!r} is a factored variant; refresh it with "
+                "refresh_from_factors(theta, phi) instead of flat weights"
+            )
         weights = jnp.asarray(weights)
         if tuple(weights.shape) != self.shape:
             raise ValueError(
                 f"refreshed() weights shape {weights.shape} != {self.shape}; "
                 "build a new Categorical for a different shape"
             )
-        return Categorical._build(weights, self.method, self.W)
+        return Categorical._build(weights, self.method, self.W, self.tb)
+
+    def refresh_from_factors(self, theta, phi, words=None) -> "Categorical":
+        """Rebuild a factored distribution's block-sum table from new
+        factors (an LDA sweep's resampled theta/phi) — same variant, same
+        W, same word positions (pass new ``words`` to retarget), and still
+        no (B, K) weight materialization."""
+        if self.method not in FACTORED_VARIANTS:
+            raise ValueError(
+                f"{self.method!r} carries flat-weight state; use "
+                "refreshed(new_weights)"
+            )
+        theta = jnp.asarray(theta)
+        phi = jnp.asarray(phi)
+        words = (
+            self.state["words"] if words is None
+            else jnp.asarray(words, jnp.int32)
+        )
+        if int(theta.shape[1]) != self.shape[1]:
+            raise ValueError(
+                f"refresh_from_factors() K={theta.shape[1]} != {self.shape[1]}"
+            )
+        if int(words.shape[0]) != self.shape[0]:
+            raise ValueError(
+                f"refresh_from_factors() got {words.shape[0]} samples, "
+                f"expected {self.shape[0]}"
+            )
+        return Categorical._build_factored(
+            theta, phi, self.state["doc_ids"], words, self.method, self.W, self.tb
+        )
 
     # -- introspection -----------------------------------------------------
 
@@ -252,13 +384,13 @@ class Categorical:
 
 def _cat_flatten(d: Categorical):
     keys = tuple(sorted(d.state))
-    return tuple(d.state[k] for k in keys), (d.method, d.W, d.shape, keys)
+    return tuple(d.state[k] for k in keys), (d.method, d.W, d.shape, keys, d.tb)
 
 
 def _cat_unflatten(aux, children) -> Categorical:
-    method, W, shape, keys = aux
+    method, W, shape, keys, tb = aux
     return Categorical(
-        method=method, W=W, shape=shape, state=dict(zip(keys, children))
+        method=method, W=W, shape=shape, state=dict(zip(keys, children)), tb=tb
     )
 
 
@@ -335,8 +467,17 @@ def _draw_with_u(dist: Categorical, u: jnp.ndarray) -> jnp.ndarray:
     if method == "kernel":
         from repro.kernels.butterfly_sample import ops as _kops
 
+        kw = {"tb": dist.tb} if dist.tb else {}
         return _kops.butterfly_sample_from_sums(
-            dist.state["weights"], dist.state["running"], u, K=K, W=W
+            dist.state["weights"], dist.state["running"], u, K=K, W=W, **kw
+        )
+    if method == "lda_kernel":
+        from repro.kernels.lda_draw import ops as _lops
+
+        return _lops.lda_draw_from_running(
+            dist.state["theta"], dist.state["phi"], dist.state["running"],
+            u, dist.state["doc_ids"], dist.state["words"],
+            K=K, W=W, tb=dist.tb or 8,
         )
     raise ValueError(
         f"variant {method!r} draws from PRNG keys, not uniforms — pass key="
@@ -368,6 +509,10 @@ def _draw_impl(
     if u is not None:
         u = jnp.asarray(u)
         if u.ndim == 2:
+            if dist.method in ("kernel", "lda_kernel"):
+                # the tiled pass B takes the whole (S, B) uniform matrix
+                # in ONE kernel launch (rows indirection) — no vmap
+                return _draw_with_u(dist, u)
             return jax.vmap(lambda uu: _draw_with_u(dist, uu))(u)
         out = _draw_with_u(dist, u)
         if num_samples != 1:
@@ -385,6 +530,8 @@ def _draw_impl(
     us = jax.random.uniform(
         key, (num_samples, dist.shape[0]), dtype=jnp.float32
     )
+    if dist.method in ("kernel", "lda_kernel"):
+        return _draw_with_u(dist, us)
     return jax.vmap(lambda uu: _draw_with_u(dist, uu))(us)
 
 

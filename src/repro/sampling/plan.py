@@ -71,20 +71,49 @@ class SamplerPlan:
     draws: int
     has_key: bool
     backend: str
+    tb: int = 0          # tiled draw-kernel rows per grid step (0 = default)
+    tk: int = 0          # pass-A category tile (0 = default)
+    factored: bool = False
 
     # -- building ----------------------------------------------------------
 
     def build(self, weights) -> Categorical:
         """Build the plan's :class:`Categorical` from (B, K) weights."""
+        if self.method in _dist.FACTORED_VARIANTS:
+            raise ValueError(
+                f"plan resolved to factored variant {self.method!r}; build "
+                "it with build_from_factors(theta, phi, words)"
+            )
         weights = jnp.asarray(weights)
         if tuple(weights.shape) != self.shape:
             raise ValueError(
                 f"plan was made for shape {self.shape}, got {weights.shape}"
             )
-        return Categorical._build(weights, self.method, self.W)
+        return Categorical._build(weights, self.method, self.W, self.tb)
 
     def build_from_logits(self, logits, temperature: float = 1.0) -> Categorical:
         return self.build(_dist.logits_to_weights(logits, temperature))
+
+    def build_from_factors(self, theta, phi, words, doc_ids=None) -> Categorical:
+        """Build from a (theta, phi, words) factorization — the LDA form.
+
+        A plan resolved to a factored variant (``lda_kernel``) builds its
+        block-sum table straight from the factors; any other resolved
+        method materializes the per-sample weights first (one fused XLA
+        product) and builds normally, so callers can use this entry point
+        uniformly and let autotune decide whether the sweep fuses.
+        """
+        theta = jnp.asarray(theta)
+        words = jnp.asarray(words, jnp.int32)
+        if doc_ids is None:
+            doc_ids = jnp.arange(words.shape[0], dtype=jnp.int32)
+        doc_ids = jnp.asarray(doc_ids, jnp.int32)
+        if self.method in _dist.FACTORED_VARIANTS:
+            return Categorical._build_factored(
+                theta, phi, doc_ids, words, self.method, self.W, self.tb
+            )
+        flat = theta[doc_ids] * jnp.asarray(phi)[words]
+        return self.build(flat)
 
     # -- drawing -----------------------------------------------------------
 
@@ -162,6 +191,7 @@ def plan(
     draws: int = 1,
     has_key: bool = True,
     backend: Optional[str] = None,
+    factored: bool = False,
 ) -> SamplerPlan:
     """Resolve a sampling strategy for a workload, once.
 
@@ -192,7 +222,10 @@ def plan(
 
     if backend is None:
         backend = jax.default_backend()
-    key = (B, K, dtype_name, method, W or 0, int(draws), bool(has_key), backend)
+    key = (
+        B, K, dtype_name, method, W or 0, int(draws), bool(has_key), backend,
+        bool(factored),
+    )
     with _PLAN_LOCK:
         hit = _PLAN_CACHE.get(key)
         if hit is not None:
@@ -201,19 +234,25 @@ def plan(
         _STATS["plan_misses"] += 1
 
     resolved, resolved_w = method, W
+    tuned_tb = tuned_tk = 0
     if method == "auto":
         from repro import autotune
 
         with _PLAN_LOCK:
             _STATS["autotune_resolves"] += 1
-        resolved, tuned_w = autotune.get_tuner().resolve(
-            B, K, draws=draws, dtype_name=dtype_name, has_key=has_key
+        res = autotune.get_tuner().resolve_full(
+            B, K, draws=draws, dtype_name=dtype_name, has_key=has_key,
+            factored=factored,
         )
-        resolved_w = W or tuned_w
-    if not resolved_w:
-        from repro.autotune import cost_model as _cm
+        resolved = res.method
+        resolved_w = W or res.W
+        tuned_tb, tuned_tk = res.tb, res.tk
+    from repro.autotune import cost_model as _cm
 
+    if not resolved_w:
         resolved_w = _cm.default_w(K)
+    if not (tuned_tb and tuned_tk):
+        tuned_tb, tuned_tk = _cm.default_tiles(B, K, int(resolved_w))
 
     p = SamplerPlan(
         method=resolved,
@@ -223,6 +262,9 @@ def plan(
         draws=int(draws),
         has_key=bool(has_key),
         backend=backend,
+        tb=int(tuned_tb),
+        tk=int(tuned_tk),
+        factored=bool(factored),
     )
     with _PLAN_LOCK:
         _PLAN_CACHE.setdefault(key, p)

@@ -9,6 +9,10 @@ a :class:`repro.sampling.SamplerPlan` in ``make_decode_step`` /
 (a ``SamplerSpec``) is resolved through ``repro.autotune`` **once per
 (B, vocab) workload at plan time**, not re-dispatched from strings on
 every step; the jitted step then draws through the plan's compiled path.
+
+Multi-draw decode (``make_decode_step(..., num_samples=n)``) samples n
+candidate tokens per sequence from one built distribution per step; for a
+kernel-variant plan all B*n walks run in ONE tiled pass-B launch.
 """
 
 from __future__ import annotations
@@ -33,38 +37,58 @@ class GenerationResult:
     prefill_len: int
 
 
-def _logits_plan(cfg: ModelConfig, B: int, V: int, dtype_name: str):
+def _logits_plan(cfg: ModelConfig, B: int, V: int, dtype_name: str,
+                 draws: int = 1):
     """The config's sampler spec, planned for a (B, V) logits workload.
 
     ``sampling.plan`` memoizes process-wide, so this resolves autotune on
     the first (shape, dtype) sighting and is a dictionary hit after —
-    whether called eagerly (known batch size) or at trace time."""
+    whether called eagerly (known batch size) or at trace time.
+    ``draws`` is the per-distribution reuse hint (multi-draw decode)."""
     spec = cfg.sampler_spec
     return sampling.plan(
         (B, V), method=spec.method, W=spec.W or None, dtype=dtype_name,
-        draws=spec.draws, has_key=True,
+        draws=max(spec.draws, draws), has_key=True,
     )
 
 
 def make_decode_step(
-    model: Model, temperature: float = 1.0, batch_size: Optional[int] = None
+    model: Model,
+    temperature: float = 1.0,
+    batch_size: Optional[int] = None,
+    num_samples: int = 1,
 ):
-    """Jitted single decode step: (params, caches, token, pos, key) ->
-    (next_token, logits, caches).
+    """Jitted decode step: (params, caches, token, pos, key) ->
+    (next_token(s), logits, caches).
 
     When ``batch_size`` is known up front the sampler plan is built (and
     autotune resolved) eagerly, before the first trace; otherwise planning
-    happens at trace time on first use and is memoized after."""
+    happens at trace time on first use and is memoized after.
+
+    ``num_samples > 1`` draws that many candidate tokens per sequence from
+    ONE built distribution (speculative/best-of-n decode): the step
+    returns (B, num_samples) candidates, the plan is resolved with the
+    reuse hint ``draws=num_samples``, and a kernel-variant plan walks all
+    B*num_samples draws in a single tiled pass-B launch (the ``rows``
+    indirection in the kernel) instead of rebuilding tables per draw."""
     cfg = model.cfg
     if batch_size is not None:
-        _logits_plan(cfg, batch_size, cfg.padded_vocab, "float32")
+        _logits_plan(cfg, batch_size, cfg.padded_vocab, "float32",
+                     draws=num_samples)
 
     @jax.jit
     def step(params, caches, token, pos, key):
         logits, caches = model.decode(params, caches, token, pos)
-        p = _logits_plan(cfg, logits.shape[0], logits.shape[1], str(logits.dtype))
-        nxt = p.sample_logits(logits, key, temperature=temperature)
-        return nxt[:, None].astype(jnp.int32), logits, caches
+        p = _logits_plan(
+            cfg, logits.shape[0], logits.shape[1], str(logits.dtype),
+            draws=num_samples,
+        )
+        nxt = p.sample_logits(
+            logits, key, temperature=temperature, num_samples=num_samples
+        )
+        if num_samples == 1:
+            return nxt[:, None].astype(jnp.int32), logits, caches
+        return nxt.T.astype(jnp.int32), logits, caches   # (B, num_samples)
 
     return step
 
