@@ -126,6 +126,54 @@ def run_fused(Bs=(4096,), Ks=(256, 1024, 4096), W=32, iters=5):
     return rows
 
 
+def run_shard(B_per=1024, Ks=(256, 1024), W=32, iters=5, method="two_level"):
+    """Mesh-sharded draw scaling: the same per-shard (B_per, K) workload
+    on a 1-device mesh vs. every available device (virtual CPU devices
+    under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+
+    The sharded path runs one shard_map of the tiled kernels with counter
+    RNG — zero collectives — so per-device draw time stays within ~1.3x
+    of the single-device figure as long as every shard has a core to run
+    on (per-shard work is identical; the residual is dispatch fan-out).
+    Virtual CPU devices beyond the physical core count time-share cores,
+    so the full-device row additionally reports ``oversubscription`` =
+    devices / cores — judge the 1.3x bound on rows where it is <= 1.
+    Rows carry a ``devices`` field.
+    """
+    import os
+
+    from jax.sharding import Mesh
+
+    from repro import sampling
+
+    devs = jax.devices()
+    cores = os.cpu_count() or 1
+    rng = np.random.default_rng(2)
+    rows = []
+    for n in sorted({1, min(len(devs), cores), len(devs)}):
+        mesh = Mesh(np.array(devs[:n]), ("data",))
+        for K in Ks:
+            B = B_per * n
+            w = jnp.array(rng.uniform(0.1, 1.0, (B, K)).astype(np.float32))
+            p = sampling.plan((B, K), method=method, W=W, mesh=mesh)
+            ws = sampling.sharded.place_rows(mesh, w)
+            key = jax.random.PRNGKey(0)
+            t = _bench(lambda: p.sample(ws, key=key), iters=iters)
+            rows.append(
+                dict(
+                    B=B_per, K=K, W=p.W, tb=p.tb, tk=p.tk, devices=n,
+                    method=method, us=t * 1e6, draws_per_s=B / t,
+                    global_B=B, oversubscription=n / cores,
+                )
+            )
+    base = {
+        (r["B"], r["K"]): r["us"] for r in rows if r["devices"] == 1
+    }
+    for r in rows:
+        r["vs_single_device"] = r["us"] / base[(r["B"], r["K"])]
+    return rows
+
+
 def run_reuse(B=4096, K=4096, W=32, draws=16):
     """Build-once/draw-many through the distribution-object API vs. the
     one-shot shim: the amortization the ``Categorical`` pytree exists for.
@@ -167,11 +215,15 @@ def run_reuse(B=4096, K=4096, W=32, draws=16):
 
 
 def write_json(rows, fused_rows=None, path: str = "BENCH_sampler.json",
-               W: int = 32) -> str:
+               W: int = 32, shard_rows=None) -> str:
     """Emit the rows as autotune-ingestible bench records.  Fused-vs-
     materializing rows land both in ``records`` (the fused timing, so the
     cache learns the factored winner) and, with their materializing
-    counterpart, under ``fused_factored``."""
+    counterpart, under ``fused_factored``.  Every record carries a
+    ``devices`` field (1 for the single-device grids; the ``--shard``
+    rows record their mesh size and B is per-shard) — readers that
+    predate the field ignore it, and ``TuningCache.ingest_records``
+    buckets by it."""
     backend = jax.default_backend()
 
     def _rec(r, W, method, us):
@@ -180,13 +232,15 @@ def write_json(rows, fused_rows=None, path: str = "BENCH_sampler.json",
             "backend": backend, "B": r["B"], "K": r["K"],
             "W": r.get("W", W), "tb": r.get("tb", tb), "tk": r.get("tk", tk),
             "draws": 1, "dtype": "float32", "method": method, "us": us,
+            "devices": r.get("devices", 1),
         }
 
     blob = {
         "schema": BENCH_SCHEMA,
         "backend": backend,
         "records": [_rec(r, W, r["method"], r["us"]) for r in rows]
-        + [_rec(r, W, r["method"], r["us"]) for r in (fused_rows or [])],
+        + [_rec(r, W, r["method"], r["us"]) for r in (fused_rows or [])]
+        + [_rec(r, W, r["method"], r["us"]) for r in (shard_rows or [])],
         "fused_factored": [
             {
                 "B": r["B"], "K": r["K"], "W": r["W"], "tb": r["tb"],
@@ -194,6 +248,14 @@ def write_json(rows, fused_rows=None, path: str = "BENCH_sampler.json",
                 "speedup": r["speedup"],
             }
             for r in (fused_rows or [])
+        ],
+        "sharded": [
+            {
+                "B": r["B"], "K": r["K"], "devices": r["devices"],
+                "us": r["us"], "vs_single_device": r["vs_single_device"],
+                "oversubscription": r["oversubscription"],
+            }
+            for r in (shard_rows or [])
         ],
     }
     with open(path, "w") as f:
@@ -210,15 +272,35 @@ def main(argv=None):
     ap.add_argument("--reuse", action="store_true",
                     help="also benchmark build-once/draw-many (Categorical "
                          "reuse) against the one-shot shim")
+    ap.add_argument("--shard", action="store_true",
+                    help="also benchmark the mesh-sharded draw path on all "
+                         "available devices (set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8 for "
+                         "virtual CPU devices)")
+    ap.add_argument("--shard-only", action="store_true",
+                    help="run ONLY the sharded scaling rows — use this in "
+                         "a separate virtual-device process so the flag "
+                         "never skews the single-device grids")
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized run: fewer iterations and shapes")
     args = ap.parse_args(argv)
+    if args.shard_only and args.json == "BENCH_sampler.json":
+        # don't clobber the single-device grid file with a shard-only blob
+        args.json = "BENCH_sampler_shard.json"
     iters = 2 if args.quick else 5
     Ks = (256, 1024) if args.quick else (64, 256, 1024, 4096)
     Bs = (1024,) if args.quick else (4096,)
-    rows = run(Bs=Bs, Ks=Ks, iters=iters)
-    fused_rows = run_fused(Bs=Bs, Ks=tuple(k for k in Ks if k >= 256),
-                           iters=iters)
+    rows, fused_rows = [], []
+    if not args.shard_only:
+        rows = run(Bs=Bs, Ks=Ks, iters=iters)
+        fused_rows = run_fused(Bs=Bs, Ks=tuple(k for k in Ks if k >= 256),
+                               iters=iters)
+    shard_rows = None
+    if args.shard or args.shard_only:
+        shard_rows = run_shard(
+            B_per=256 if args.quick else 1024,
+            Ks=(256,) if args.quick else (256, 1024), iters=iters,
+        )
     print("name,us_per_call,derived")
     for r in rows:
         print(
@@ -232,6 +314,13 @@ def main(argv=None):
             f"materializing_us={r['materializing_us']:.0f};"
             f"speedup={r['speedup']:.2f}x"
         )
+    if shard_rows:
+        for r in shard_rows:
+            print(
+                f"shard_{r['method']}_B{r['B']}_K{r['K']}_dev{r['devices']},"
+                f"{r['us']:.0f},draws_per_s={r['draws_per_s']:.3g};"
+                f"vs_single_device={r['vs_single_device']:.2f}x"
+            )
     if args.reuse:
         for r in run_reuse():
             print(
@@ -240,7 +329,7 @@ def main(argv=None):
                 f"speedup={r['speedup']:.2f}x"
             )
     if not args.no_json:
-        path = write_json(rows, fused_rows, args.json)
+        path = write_json(rows, fused_rows, args.json, shard_rows=shard_rows)
         print(f"# wrote {path} ({BENCH_SCHEMA}; feed to autotune_bench --import)")
 
 

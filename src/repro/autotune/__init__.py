@@ -69,12 +69,14 @@ def resolve(
     dtype_name: str = "float32",
     has_key: bool = True,
     factored: bool = False,
+    devices: int = 1,
 ):
     """Module-level convenience: the global tuner's (method, W) for a
-    workload descriptor."""
+    workload descriptor (``devices > 1``: B is the per-shard row count
+    of a mesh-sharded workload; the bucket is topology-tagged)."""
     return get_tuner().resolve(
         B, K, draws=draws, dtype_name=dtype_name, has_key=has_key,
-        factored=factored,
+        factored=factored, devices=devices,
     )
 
 
@@ -86,11 +88,12 @@ def resolve_full(
     dtype_name: str = "float32",
     has_key: bool = True,
     factored: bool = False,
+    devices: int = 1,
 ) -> Resolution:
     """Full resolution including the tiled-kernel tb/tk launch params."""
     return get_tuner().resolve_full(
         B, K, draws=draws, dtype_name=dtype_name, has_key=has_key,
-        factored=factored,
+        factored=factored, devices=devices,
     )
 
 

@@ -9,12 +9,13 @@ On-disk format (``~/.cache/repro/autotune.json`` by default, overridable
 via ``$REPRO_AUTOTUNE_CACHE``)::
 
     {
-      "schema": "repro-autotune-v2",
+      "schema": "repro-autotune-v3",
       "entries": {
         "cpu|B4096|K1024|d1|float32|key": {
           "method": "two_level", "W": 32, "tb": 8, "tk": 512, "us": 184.2,
           "source": "measured" | "model" | "bench"
         },
+        "cpu|B512|K1024|d1|float32|key|dev8": {...},
         ...
       }
     }
@@ -23,7 +24,12 @@ via ``$REPRO_AUTOTUNE_CACHE``)::
 — the two candidate sets differ, so they tune independently; factored
 workloads append ``|fac`` for the same reason.  ``tb``/``tk`` are the
 winning draw-kernel row tile and pass-A category tile — new in v2; v1
-files load fine, their entries simply fall back to the kernel defaults)
+files load fine, their entries simply fall back to the kernel defaults.
+Mesh-sharded workloads append ``|devN`` — new in v3: the bucket's B is
+the *per-shard* row count and N the shard count, so a winner tuned for
+one topology never shadows the single-device winner at the same local
+shape.  v1/v2 files load fine — their keys simply have no ``|dev``
+suffix, which is exactly the ``devices=1`` bucket.)
 
 ``benchmarks/sampler_bench.py --json`` emits per-method timing *records*
 in the same schema family (``repro-autotune-bench-v1``); feed them to
@@ -42,9 +48,10 @@ import tempfile
 import threading
 from typing import Dict, Iterable, List, Optional
 
-SCHEMA = "repro-autotune-v2"
-# older cache files we still read (entries simply lack the v2 tile fields)
-COMPAT_SCHEMAS = ("repro-autotune-v1", SCHEMA)
+SCHEMA = "repro-autotune-v3"
+# older cache files we still read (v1 entries lack the v2 tile fields,
+# v1/v2 keys lack the v3 |dev suffix == the devices=1 bucket)
+COMPAT_SCHEMAS = ("repro-autotune-v1", "repro-autotune-v2", SCHEMA)
 BENCH_SCHEMA = "repro-autotune-bench-v1"
 
 # precedence when deciding whether a new record may overwrite an old one
@@ -68,17 +75,24 @@ def _bucket(n: int) -> int:
 
 def bucket_key(
     backend: str, B: int, K: int, draws: int, dtype: str, has_key: bool = True,
-    factored: bool = False,
+    factored: bool = False, devices: int = 1,
 ) -> str:
     """Shape-bucket cache key.  ``has_key`` is part of the key: callers
     without a PRNG key have a smaller candidate set (no gumbel/alias), so
     a keyed winner must not shadow — or be clobbered by — the key-less
     winner for the same shapes.  ``factored`` workloads (weights arrive as
     a theta-phi product; the fused lda_kernel path is a candidate) tune
-    separately for the same reason."""
+    separately for the same reason.  ``devices`` (v3) marks mesh-sharded
+    buckets: ``B`` is then the per-shard row count, and the ``|devN``
+    suffix keeps topology winners out of the single-device bucket
+    (``devices=1`` emits no suffix, so v1/v2 entries keep matching)."""
     kd = "key" if has_key else "nokey"
     base = f"{backend}|B{_bucket(B)}|K{_bucket(K)}|d{_bucket(draws)}|{dtype}|{kd}"
-    return base + "|fac" if factored else base
+    if factored:
+        base += "|fac"
+    if devices and devices > 1:
+        base += f"|dev{_bucket(devices)}"
+    return base
 
 
 class TuningCache:
@@ -191,9 +205,11 @@ class TuningCache:
 
         Accepts the ``repro-autotune-bench-v1`` blob emitted by
         ``sampler_bench --json``, a bare record list
-        ``[{backend, B, K, draws?, dtype?, method, W?, us}, ...]``, or a
-        ``repro-autotune-v1`` cache file (another machine's winners,
-        merged entry-by-entry).  Returns the number of buckets updated.
+        ``[{backend, B, K, draws?, dtype?, devices?, method, W?, us},
+        ...]``, or a ``repro-autotune-v1``/``v2``/``v3`` cache file
+        (another machine's winners, merged entry-by-entry).  Returns the
+        number of buckets updated.  Records without a ``devices`` field
+        land in the single-device buckets (back-compatible reader).
         """
         if isinstance(blob_or_records, dict):
             schema = blob_or_records.get("schema")
@@ -233,6 +249,7 @@ class TuningCache:
                         r.get("backend", "cpu"), r["B"], r["K"],
                         r.get("draws", 1), r.get("dtype", "float32"),
                         has_key=has_key, factored=factored,
+                        devices=int(r.get("devices", 1)),
                     )
                     if key not in best or us < best[key]["us"]:
                         best[key] = {"method": r["method"],

@@ -222,12 +222,13 @@ class Tuner:
         dtype_name: str = "float32",
         has_key: bool = True,
         factored: bool = False,
+        devices: int = 1,
         candidates: Optional[Sequence[str]] = None,
     ) -> Tuple[str, int]:
         """Back-compat (method, W) resolution; see :meth:`resolve_full`."""
         return self.resolve_full(
             B, K, draws=draws, dtype_name=dtype_name, has_key=has_key,
-            factored=factored, candidates=candidates,
+            factored=factored, devices=devices, candidates=candidates,
         ).pair()
 
     def resolve_full(
@@ -239,11 +240,17 @@ class Tuner:
         dtype_name: str = "float32",
         has_key: bool = True,
         factored: bool = False,
+        devices: int = 1,
         candidates: Optional[Sequence[str]] = None,
     ) -> Resolution:
         """Full resolution including the tiled-kernel ``tb``/``tk``
-        launch parameters (v2 cache records persist them; v1 records fall
-        back to the kernel defaults for the bucket shape)."""
+        launch parameters (v2+ cache records persist them; v1 records fall
+        back to the kernel defaults for the bucket shape).
+
+        ``devices > 1`` marks a mesh-sharded workload: ``B`` is the
+        *per-shard* row count (the shape the shard's kernels actually
+        launch with — that is what candidates are measured/modeled at)
+        and the winner lands in the topology's own v3 cache bucket."""
         backend = self.backend
         cands = tuple(
             candidates
@@ -252,7 +259,8 @@ class Tuner:
         )
         mode = self.mode
         key = bucket_key(
-            backend, B, K, draws, dtype_name, has_key=has_key, factored=factored
+            backend, B, K, draws, dtype_name, has_key=has_key,
+            factored=factored, devices=devices,
         )
 
         if mode != "off":

@@ -2,6 +2,14 @@ from repro.kernels.butterfly_sample.ops import (
     build_block_sums,
     butterfly_sample,
     butterfly_sample_from_sums,
+    butterfly_sample_from_sums_rng,
+    butterfly_sample_rng,
 )
 
-__all__ = ["build_block_sums", "butterfly_sample", "butterfly_sample_from_sums"]
+__all__ = [
+    "build_block_sums",
+    "butterfly_sample",
+    "butterfly_sample_from_sums",
+    "butterfly_sample_from_sums_rng",
+    "butterfly_sample_rng",
+]

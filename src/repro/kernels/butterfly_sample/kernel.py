@@ -57,6 +57,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels import rng as _rng
 from repro.kernels import runtime
 
 # jax renamed TPUCompilerParams -> CompilerParams; support both
@@ -208,6 +209,150 @@ def fused_draw_pallas(
         interpret=interpret,
     )(wp, u[:, None])
     return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Fused draw with IN-KERNEL counter RNG: the (B,) uniform operand is gone
+# ---------------------------------------------------------------------------
+
+
+def _fused_draw_rng_kernel(meta_ref, w_ref, out_ref, *, W: int, tb: int, hw: bool):
+    """Fused draw whose uniforms are generated inside the kernel from a
+    (seed, global-row) counter — no u operand, no key-split chain.
+
+    ``meta_ref`` is a (1, 3) uint32 block: [s0, s1, row_offset].  The
+    offset is the shard's first global row, so a row-sharded launch draws
+    the same bits any other shard layout would (DESIGN.md §5).  ``hw``
+    selects the TPU hardware PRNG (per-tile-seeded, TPU-native only);
+    the default is the portable Threefry twin — ~40 vector uint32 ops,
+    bit-identical to the XLA-side generator.
+    """
+    i = pl.program_id(0)
+    s0, s1, off = meta_ref[0, 0], meta_ref[0, 1], meta_ref[0, 2]
+    tile0 = off + jnp.uint32(i * tb)
+    if hw:
+        pltpu.prng_seed(s0, s1, tile0)
+        bits = pltpu.prng_random_bits((tb,))
+        u = _rng.bits_to_uniform(pltpu.bitcast(bits, jnp.uint32))
+    else:
+        rows = tile0 + jax.lax.broadcasted_iota(jnp.uint32, (tb, 1), 0)[:, 0]
+        b0, _ = _rng.threefry2x32(s0, s1, rows, jnp.zeros_like(rows))
+        u = _rng.bits_to_uniform(b0)
+    w = w_ref[...].astype(jnp.float32)
+    out_ref[:, 0] = _draw_tile(w, u, W)
+
+
+def fused_draw_rng_pallas(
+    wp: jnp.ndarray,
+    seed: jnp.ndarray,
+    row_offset,
+    W: int,
+    tb: int,
+    hw: bool = False,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """One-kernel fused draw over padded (Bp, Kp) weights with in-kernel
+    RNG.  ``seed`` is a (2,) uint32 pair (already domain-tagged);
+    ``row_offset`` the first row's global id (traced scalar is fine)."""
+    interpret = runtime.resolve_interpret(interpret)
+    Bp, Kp = wp.shape
+    meta = jnp.concatenate(
+        [
+            jnp.asarray(seed, jnp.uint32).reshape(2),
+            jnp.asarray(row_offset).astype(jnp.uint32).reshape(1),
+        ]
+    ).reshape(1, 3)
+    out = pl.pallas_call(
+        functools.partial(_fused_draw_rng_kernel, W=W, tb=tb, hw=hw),
+        grid=(Bp // tb,),
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+            pl.BlockSpec((tb, Kp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(meta, wp)
+    return out[:, 0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("W", "tb", "tk", "hw", "interpret")
+)
+def butterfly_sample_rng_pallas(
+    weights: jnp.ndarray,
+    seed: jnp.ndarray,
+    row_offset=0,
+    W: int = 32,
+    tb: int = 8,
+    tk: int = 512,
+    hw: bool = False,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Seed-driven fused draw: (B, K) weights + (2,) uint32 seed -> (B,).
+
+    The uniform for row r is ``uniform(tag(seed), row_offset + r)`` —
+    generated *inside* the fused kernel (the (B,) operand and its HBM
+    read are deleted); the VMEM-overflow fallback takes the two-pass
+    route with the same counters derived XLA-side (pass B's block search
+    needs u before the DMA addresses exist), so both routes draw
+    bit-identical indices.
+    """
+    B, K = weights.shape
+    seed2 = _rng.fold(jnp.asarray(seed, jnp.uint32), _rng.TAG_U, 0)
+    padK = (-K) % W
+    Kp = K + padK
+    tb = _fused_tb(tb, Kp)
+    if tb * Kp * 4 > _FUSED_TILE_BYTES:
+        if hw:
+            # the two-pass route derives u XLA-side (the block search needs
+            # it before the DMA addresses exist) — hardware bits can't be
+            # reproduced there, so silently switching streams would break
+            # the fixed-seed reproducibility this function promises
+            raise ValueError(
+                f"hw_rng needs the fused (tb={tb}, Kp={Kp}) weight tile to "
+                "fit the VMEM budget; this shape falls back to the two-pass "
+                "route — use the default Threefry RNG (hw=False)"
+            )
+        wp, running = _build_sums_impl(weights, W, tb, tk, interpret)
+        u = _rng.row_uniforms(seed2, row_offset, B)
+        return _draw_from_sums_impl(wp, running, u, B, K, W, tb, interpret)
+    padB = (-B) % tb
+    wp = jnp.pad(weights, ((0, padB), (0, padK)))
+    idx = fused_draw_rng_pallas(
+        wp, seed2, row_offset, W, tb, hw=hw, interpret=interpret
+    )
+    return jnp.minimum(idx[:B], K - 1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("S", "B", "K", "W", "tb", "interpret")
+)
+def sample_from_block_sums_rng_pallas(
+    wp: jnp.ndarray,
+    running: jnp.ndarray,
+    seed: jnp.ndarray,
+    row_offset=0,
+    S: int = 1,
+    B: int = 0,
+    K: int = 0,
+    W: int = 32,
+    tb: int = 8,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Seed-driven table-in pass B: S draws per row from prebuilt
+    (wp, running) state, uniforms derived from (global row, draw index)
+    counters — one launch for all S*B walks, launch count independent of
+    S, no key-split chain.  Returns (B,) when S == 1, else (S, B)."""
+    seed2 = _rng.fold(jnp.asarray(seed, jnp.uint32), _rng.TAG_U, 0)
+    if S == 1:
+        u = _rng.row_uniforms(seed2, row_offset, B)
+    else:
+        u = _rng.multi_row_uniforms(seed2, row_offset, B, S)
+    return _draw_from_sums_impl(wp, running, u, B, K, W, tb, interpret)
 
 
 # ---------------------------------------------------------------------------

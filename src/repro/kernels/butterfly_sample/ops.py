@@ -17,6 +17,13 @@ Three entry points:
                                     as pytree leaves); accepts (S, B)
                                     uniforms for multi-draw in one launch
 
+plus their seed-driven twins ``butterfly_sample_rng`` /
+``butterfly_sample_from_sums_rng``: the (B,) uniform buffer is replaced
+by counter RNG (:mod:`repro.kernels.rng`) — generated *inside* the fused
+kernel, derived from (global row, draw) counters for pass B — which is
+what the mesh-sharded draw path (`repro.sampling.sharded`) launches
+per shard.
+
 ``interpret=None`` everywhere resolves through
 :func:`repro.kernels.runtime.default_interpret` — the same backend
 detection the low-level ``*_pallas`` entry points now apply themselves.
@@ -27,7 +34,9 @@ from __future__ import annotations
 from repro.kernels.butterfly_sample.kernel import (
     build_block_sums_pallas,
     butterfly_sample_pallas,
+    butterfly_sample_rng_pallas,
     sample_from_block_sums_pallas,
+    sample_from_block_sums_rng_pallas,
 )
 
 
@@ -45,6 +54,47 @@ def butterfly_sample(
     drawn indices (see kernel.py docstring).
     """
     return butterfly_sample_pallas(weights, u, W=W, tb=tb, tk=tk, interpret=interpret)
+
+
+def butterfly_sample_rng(
+    weights,
+    seed,
+    row_offset=0,
+    W: int = 32,
+    tb: int = 8,
+    tk: int = 512,
+    hw: bool = False,
+    interpret: bool | None = None,
+):
+    """Fused tiled draw with in-kernel counter RNG: (B, K) weights plus a
+    (2,) uint32 seed pair -> (B,) indices.  The (B,) uniform operand is
+    generated inside the kernel from (seed, row_offset + row) counters —
+    see :mod:`repro.kernels.rng`; ``row_offset`` is the shard's first
+    global row in a mesh-sharded launch (DESIGN.md §5)."""
+    return butterfly_sample_rng_pallas(
+        weights, seed, row_offset, W=W, tb=tb, tk=tk, hw=hw, interpret=interpret
+    )
+
+
+def butterfly_sample_from_sums_rng(
+    wp,
+    running,
+    seed,
+    B: int,
+    K: int,
+    S: int = 1,
+    row_offset=0,
+    W: int = 32,
+    tb: int = 8,
+    interpret: bool | None = None,
+):
+    """Seed-driven pass B: S draws per row from prebuilt ``(wp, running)``
+    state in one launch, uniforms derived from (global row, draw) counters
+    (no per-draw keys, launch count independent of S)."""
+    return sample_from_block_sums_rng_pallas(
+        wp, running, seed, row_offset, S=S, B=B, K=K, W=W, tb=tb,
+        interpret=interpret,
+    )
 
 
 def build_block_sums(

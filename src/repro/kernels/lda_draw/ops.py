@@ -25,6 +25,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import rng as _rng
 from repro.kernels import runtime
 from repro.kernels.lda_draw.kernel import (
     _pad_k,
@@ -157,6 +158,67 @@ def lda_draw_factored(
         doc_ids.astype(jnp.int32), words.astype(jnp.int32), u, W,
     )
     return jnp.minimum(idx[:B], K - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("W", "tb", "impl", "interpret"))
+def lda_draw_factored_rng(
+    theta,
+    phi,
+    doc_ids,
+    words,
+    seed,
+    row_offset=0,
+    W: int = 32,
+    tb: int = 8,
+    impl: Optional[str] = None,
+    interpret: bool | None = None,
+):
+    """Seed-driven fused factored draw: the (B,) uniform buffer is
+    replaced by counter RNG — u[b] = uniform(tag(seed), row_offset + b) —
+    so a mesh-sharded Gibbs sweep passes one replicated (2,) seed and its
+    shard's global row offset instead of splitting keys per shard/draw.
+    Weights still never materialize (same kernels as
+    :func:`lda_draw_factored`)."""
+    B = words.shape[0]
+    seed2 = _rng.fold(jnp.asarray(seed, jnp.uint32), _rng.TAG_U, 0)
+    u = _rng.row_uniforms(seed2, row_offset, B)
+    return lda_draw_factored(
+        theta, phi, doc_ids, words, u, W=W, tb=tb, impl=impl,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("K", "S", "W", "tb", "impl", "interpret")
+)
+def lda_draw_from_running_rng(
+    thetap,
+    phip,
+    running,
+    seed,
+    doc_ids,
+    words,
+    K: int,
+    S: int = 1,
+    row_offset=0,
+    W: int = 32,
+    tb: int = 8,
+    impl: Optional[str] = None,
+    interpret: bool | None = None,
+):
+    """Seed-driven factored pass B: S draws per sample from prebuilt
+    running block sums, all S*B walks in one launch, uniforms from
+    (global row, draw index) counters."""
+    B = words.shape[0]
+    seed2 = _rng.fold(jnp.asarray(seed, jnp.uint32), _rng.TAG_U, 0)
+    if S == 1:
+        u = _rng.row_uniforms(seed2, row_offset, B)
+    else:
+        u = _rng.multi_row_uniforms(seed2, row_offset, B, S)
+    return lda_draw_from_running(
+        thetap, phip, running, u, doc_ids, words, K=K, W=W, tb=tb, impl=impl,
+        interpret=interpret,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("W", "tb", "impl", "interpret"))

@@ -6,6 +6,7 @@ touches jax device state (the dry-run sets XLA_FLAGS before first init).
 
 from __future__ import annotations
 
+import numpy as np
 import jax
 
 
@@ -19,5 +20,38 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(model: int = 1):
     """Whatever-fits mesh for CPU tests: all local devices on 'data'."""
     n = len(jax.devices())
-    assert n % model == 0
+    if model < 1 or n % model:
+        raise ValueError(
+            f"cannot build a host mesh with model={model}: {n} local "
+            f"device{'s' if n != 1 else ''} is not divisible by it "
+            f"(try model in {sorted(m for m in range(1, n + 1) if n % m == 0)}, "
+            "or use smallest_fitting_mesh to take a device subset)"
+        )
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def smallest_fitting_mesh(data: int = 1, model: int = 1):
+    """A (data, model) mesh on the *first* data*model local devices.
+
+    Unlike :func:`make_host_mesh` this never requires the requested shape
+    to consume every local device — tests ask for exactly the topology
+    they mean (e.g. a (2, 1) mesh on an 8-device host) and get the
+    smallest mesh that fits it.  Raises ``ValueError`` when the host has
+    too few devices.
+    """
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be positive, got ({data}, {model})")
+    devs = jax.devices()
+    need = data * model
+    if need > len(devs):
+        raise ValueError(
+            f"smallest_fitting_mesh(({data}, {model})) needs {need} devices "
+            f"but only {len(devs)} are available (set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N for CPU "
+            "virtual devices)"
+        )
+    from jax.sharding import Mesh
+
+    return Mesh(
+        np.array(devs[:need]).reshape(data, model), ("data", "model")
+    )

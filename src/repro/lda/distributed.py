@@ -1,36 +1,62 @@
 """Distributed LDA: documents shard over the data axes, phi replicates.
 
-The Gibbs update is already a pure function; distribution is entirely
-declarative: theta/z/docs are row-sharded over ('pod','data'), phi is
-replicated, and GSPMD turns the word-topic count scatter into local
-partial counts + an all-reduce — the classic data-parallel LDA layout
-(Newman et al.'s AD-LDA, here with exact synchronous counts).
+The sweep is a ``shard_map`` over the mesh's data axes — the classic
+data-parallel AD-LDA layout (Newman et al.), made explicit instead of
+left to GSPMD:
+
+* **z-draw** — each shard draws its own word positions through the
+  ``repro.sampling`` plan/Categorical factored path (``lda_kernel`` under
+  ``method="auto"``): local theta rows times replicated phi, tiled
+  kernels per shard, the (B, K) weight product never materializes, and
+  the uniforms come from the counter RNG (:mod:`repro.kernels.rng`)
+  seeded by the replicated sweep key with *global* row counters — no
+  per-shard key splits, no (B,) uniform transfers, and bit-identical
+  draws whatever the device count.  The draw path contains **zero**
+  cross-device collectives.
+* **counts** — doc-topic counts are shard-local; the word-topic count
+  matrix is the one quantity AD-LDA must synchronize, combined with a
+  single explicit ``lax.psum`` (the only collective in the whole sweep —
+  ``tests/test_sharded_sampler.py`` gates the jaxpr on exactly that).
+* **theta/phi resample** — theta rows are updated locally (per-shard
+  folded key: different shards must not reuse one gamma stream); phi is
+  resampled identically on every shard from the replicated key and the
+  all-reduced counts, so it stays replicated without a broadcast.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.lda.corpus import Corpus
+from repro import sampling
+from repro.kernels import rng as _rng
 from repro.lda.gibbs import LDAState, _counts, _update_phi, _update_theta
+from repro.sampling.sharded import (
+    _linear_index,
+    _shard_map,
+    data_axes,
+    data_size,
+    row_spec,
+)
 
 
 def _doc_sharded(mesh):
-    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
-    return NamedSharding(mesh, P(tuple(axes) if len(axes) > 1 else axes[0]))
+    return NamedSharding(mesh, row_spec(mesh))
 
 
 def make_sharded_gibbs(mesh, K: int, V: int, alpha: float = 0.1,
-                       beta: float = 0.05, method: str = "fenwick", W: int = 32):
+                       beta: float = 0.05, method: str = "auto",
+                       W: Optional[int] = None):
     """Returns (place, step): ``place`` shards an LDAState + docs onto the
-    mesh; ``step`` is the jitted distributed sweep."""
+    mesh; ``step`` is the jitted shard_map'd sweep described above."""
     row = _doc_sharded(mesh)
     rep = NamedSharding(mesh, P())
+    rs = row_spec(mesh)
+    axes = data_axes(mesh)
+    nd = data_size(mesh)
 
     def place(state: LDAState, docs, mask):
         return (
@@ -45,23 +71,59 @@ def make_sharded_gibbs(mesh, K: int, V: int, alpha: float = 0.1,
             jax.device_put(jnp.asarray(mask), row),
         )
 
-    @functools.partial(
-        jax.jit,
-        static_argnames=(),
-        out_shardings=LDAState(theta=row, phi=rep, z=row, key=rep, step=rep),
-    )
-    def step(state: LDAState, docs, mask):
-        C, N = docs.shape
-        weights = state.theta[:, None, :] * state.phi[docs]       # (M,N,K) sharded on M
-        flat = weights.reshape(C * N, K)
-        kz, k_theta, k_phi, k_next = jax.random.split(state.key, 4)
-        u = jax.random.uniform(kz, (C * N,), dtype=jnp.float32)
-        from repro.core import sample_categorical
+    def shard_step(theta, phi, z_old, key, step, docs, mask):
+        del z_old                      # replaced wholesale by this sweep
+        C, N = docs.shape              # per-shard documents
+        B = C * N
+        kz, k_theta, k_phi, k_next = jax.random.split(key, 4)
 
-        z = sample_categorical(flat, u=u, method=method, W=W).reshape(C, N)
-        doc_topic, word_topic = _counts(z, docs, mask, K, V)       # wt all-reduced
-        theta = _update_theta(k_theta, doc_topic, alpha)
+        # -- z-draw: factored plan per shard, counter RNG, no collectives
+        p = sampling.plan(
+            (B, K), method=method, W=W, dtype=str(theta.dtype),
+            has_key=False, factored=True, devices=nd,
+        )
+        words = docs.reshape(-1)
+        doc_ids = jnp.arange(B, dtype=jnp.int32) // N
+        row0 = _linear_index(mesh) * B          # first global word position
+        seed = _rng.seed_from_key(kz)
+        if p.method in sampling.FACTORED_VARIANTS:
+            from repro.kernels.lda_draw import lda_draw_factored_rng
+
+            idx = lda_draw_factored_rng(
+                theta, phi, doc_ids, words, seed, row_offset=row0,
+                W=p.W, tb=p.tb or 8,
+            )
+        else:
+            dist = p.build_from_factors(theta, phi, words, doc_ids)
+            u = _rng.row_uniforms(_rng.fold(seed, _rng.TAG_U, 0), row0, B)
+            idx = p.draw(dist, u=u)
+        z = idx.reshape(C, N)
+
+        # -- counts: doc-topic local, word-topic all-reduced (AD-LDA's
+        # one required synchronization)
+        doc_topic, word_topic = _counts(z, docs, mask, K, V)
+        word_topic = jax.lax.psum(word_topic, axes)
+
+        # -- resample: theta per shard (folded key — shards must not share
+        # a gamma stream), phi identically on every shard (replicated)
+        theta = _update_theta(
+            jax.random.fold_in(k_theta, _linear_index(mesh)), doc_topic, alpha
+        )
         phi = _update_phi(k_phi, word_topic, beta)
-        return LDAState(theta=theta, phi=phi, z=z, key=k_next, step=state.step + 1)
+        return LDAState(theta=theta, phi=phi, z=z, key=k_next, step=step + 1)
+
+    step_sm = _shard_map(
+        shard_step,
+        mesh=mesh,
+        in_specs=(rs, P(), rs, P(), P(), rs, rs),
+        out_specs=LDAState(theta=rs, phi=P(), z=rs, key=P(), step=P()),
+        check_rep=False,  # pallas_call has no replication rule
+    )
+
+    @jax.jit
+    def step(state: LDAState, docs, mask):
+        return step_sm(
+            state.theta, state.phi, state.z, state.key, state.step, docs, mask
+        )
 
     return place, step

@@ -23,6 +23,13 @@ compatibility shims over this package (byte-identical draws for fixed
     p = sampling.plan(weights.shape, method="auto", draws=16)
     dist = p.build(weights)                  # tables built exactly once
     idx = p.draw(dist, key=key, num_samples=16)   # (16, B) draws
+
+Multi-device batches pass a mesh — the same plan API, shard_map'd tiled
+kernels per shard, counter RNG instead of uniform buffers, zero
+collectives on the draw path (:mod:`repro.sampling.sharded`)::
+
+    p = sampling.plan((B, V), mesh=mesh)     # resolves the per-shard shape
+    tok = p.sample_logits(logits, key)       # logits row-sharded over mesh
 """
 
 from repro.sampling.distribution import (
@@ -41,6 +48,7 @@ from repro.sampling.plan import (
     plan_stats,
     reset_plans,
 )
+from repro.sampling import sharded
 
 __all__ = [
     "Categorical",
@@ -55,4 +63,5 @@ __all__ = [
     "plan",
     "plan_stats",
     "reset_plans",
+    "sharded",
 ]

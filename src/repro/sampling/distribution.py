@@ -140,17 +140,24 @@ def _build_state(method: str, weights: jnp.ndarray, W: int) -> Dict[str, Any]:
 _build_state_jit = jax.jit(_build_state, static_argnames=("method", "W"))
 
 
-def _counted_build(method: str, weights: jnp.ndarray, W: int) -> Dict[str, Any]:
+def _note_build() -> None:
+    """Count one table build.  The sharded build path
+    (``repro.sampling.sharded``) constructs its state through shard_map
+    rather than ``_counted_build`` and bumps the counter here, so the
+    zero-rebuilds witness covers mesh-sharded distributions too."""
     global _BUILD_COUNT
     _BUILD_COUNT += 1
+
+
+def _counted_build(method: str, weights: jnp.ndarray, W: int) -> Dict[str, Any]:
+    _note_build()
     return _build_state_jit(method, weights, W)
 
 
 def _counted_build_factored(theta, phi, doc_ids, words, W: int, tb: int):
     """Factored table build (lda_kernel variant): pass A runs straight on
     the (theta, phi) factors — no (B, K) weight tensor, on any backend."""
-    global _BUILD_COUNT
-    _BUILD_COUNT += 1
+    _note_build()
     from repro.kernels.lda_draw import ops as _lops
 
     thetap, phip, running = _lops.lda_build_running(

@@ -5,9 +5,11 @@
 frozen :class:`SamplerPlan` whose ``build``/``draw``/``sample`` methods
 route through the jitted kernels in :mod:`repro.sampling.distribution`.
 Plans are memoized per (shape, dtype, requested method/W, draws, has_key,
-backend): re-planning the same workload is a dictionary hit, and the
-autotune resolve counter (:func:`plan_stats`) proves the resolution count
-stays at one per distinct workload.
+backend, device topology): re-planning the same workload is a dictionary
+hit, the autotune resolve counter (:func:`plan_stats`) proves the
+resolution count stays at one per distinct workload, and two topologies
+never share a plan (a mesh signature joins the key — see
+``plan(mesh=...)`` for the sharded path).
 
 Typical serving wiring (what ``repro.serve.engine`` does)::
 
@@ -54,6 +56,9 @@ def reset_plans() -> None:
         _PLAN_CACHE.clear()
         for k in _STATS:
             _STATS[k] = 0
+    from repro.sampling import sharded as _sharded
+
+    _sharded.reset_sharded_cache()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,7 +67,13 @@ class SamplerPlan:
 
     Frozen and hashable — safe to memoize, close over in jitted functions,
     and compare.  ``method`` is always concrete here ("auto" resolved at
-    plan time)."""
+    plan time).
+
+    A *sharded* plan (``mesh`` set) was resolved for the per-shard
+    (B/devices, K) workload; its ``build``/``draw``/``sample``/
+    ``sample_logits`` route through :mod:`repro.sampling.sharded` —
+    shard_map'd per-shard kernels with counter RNG, zero collectives on
+    the draw path (DESIGN.md §5)."""
 
     method: str
     W: int
@@ -74,6 +85,9 @@ class SamplerPlan:
     tb: int = 0          # tiled draw-kernel rows per grid step (0 = default)
     tk: int = 0          # pass-A category tile (0 = default)
     factored: bool = False
+    mesh: Optional[object] = None    # jax.sharding.Mesh for sharded plans
+    spec: Optional[object] = None    # row PartitionSpec override
+    devices: int = 1                 # shards the batch rows split into
 
     # -- building ----------------------------------------------------------
 
@@ -84,6 +98,10 @@ class SamplerPlan:
                 f"plan resolved to factored variant {self.method!r}; build "
                 "it with build_from_factors(theta, phi, words)"
             )
+        if self.mesh is not None:
+            from repro.sampling import sharded as _sharded
+
+            return _sharded.build_sharded(self, weights)
         weights = jnp.asarray(weights)
         if tuple(weights.shape) != self.shape:
             raise ValueError(
@@ -103,6 +121,13 @@ class SamplerPlan:
         product) and builds normally, so callers can use this entry point
         uniformly and let autotune decide whether the sweep fuses.
         """
+        if self.mesh is not None:
+            raise ValueError(
+                "sharded plans don't build factored state globally: doc_ids/"
+                "words index *local* factor rows.  Build per shard instead "
+                "(plan the per-shard shape with devices=N inside a shard_map "
+                "body — see repro.lda.distributed.make_sharded_gibbs)"
+            )
         theta = jnp.asarray(theta)
         words = jnp.asarray(words, jnp.int32)
         if doc_ids is None:
@@ -124,7 +149,19 @@ class SamplerPlan:
         u: Optional[jnp.ndarray] = None,
         num_samples: int = 1,
     ) -> jnp.ndarray:
-        """Draw from a built distribution (see :func:`sampling.draw`)."""
+        """Draw from a built distribution (see :func:`sampling.draw`).
+
+        A sharded plan draws per shard with counter RNG — pass ``key=``
+        (``u=`` buffers are exactly what the sharded path deletes)."""
+        if self.mesh is not None:
+            from repro.sampling import sharded as _sharded
+
+            if u is not None:
+                raise ValueError(
+                    "sharded plans derive uniforms from the counter RNG; "
+                    "pass key= instead of u="
+                )
+            return _sharded.draw_sharded(self, dist, key, num_samples)
         return _dist.draw(dist, key=key, u=u, num_samples=num_samples)
 
     def sample(
@@ -134,7 +171,24 @@ class SamplerPlan:
         u: Optional[jnp.ndarray] = None,
         num_samples: int = 1,
     ) -> jnp.ndarray:
-        """Build a throwaway distribution and draw — the one-shot path."""
+        """Build a throwaway distribution and draw — the one-shot path.
+
+        Sharded plans fuse build+draw into one shard_map launch."""
+        if self.method in _dist.FACTORED_VARIANTS:
+            raise ValueError(
+                f"plan resolved to factored variant {self.method!r}; build "
+                "it with build_from_factors(theta, phi, words) and draw "
+                "from that"
+            )
+        if self.mesh is not None:
+            from repro.sampling import sharded as _sharded
+
+            if u is not None:
+                raise ValueError(
+                    "sharded plans derive uniforms from the counter RNG; "
+                    "pass key= instead of u="
+                )
+            return _sharded.sample_sharded(self, weights, key, num_samples)
         return self.draw(self.build(weights), key=key, u=u, num_samples=num_samples)
 
     def sample_logits(
@@ -155,6 +209,13 @@ class SamplerPlan:
             if num_samples == 1:
                 return greedy
             return jnp.broadcast_to(greedy, (num_samples,) + greedy.shape)
+        if self.mesh is not None:
+            from repro.sampling import sharded as _sharded
+
+            return _sharded.sample_logits_sharded(
+                self, logits, key, temperature=temperature,
+                num_samples=num_samples,
+            )
         if self.method == "gumbel":
             from repro.core import gumbel as _gumbel
 
@@ -192,6 +253,9 @@ def plan(
     has_key: bool = True,
     backend: Optional[str] = None,
     factored: bool = False,
+    mesh=None,
+    spec=None,
+    devices: Optional[int] = None,
 ) -> SamplerPlan:
     """Resolve a sampling strategy for a workload, once.
 
@@ -201,18 +265,27 @@ def plan(
 
     ``method="auto"`` (the default) consults ``repro.autotune`` — tuning
     cache first, cost model on a miss — exactly once per distinct
-    (shape, dtype, draws, has_key, backend): results are memoized
-    process-wide, and draw calls made through the returned plan never
-    re-resolve.  ``W`` falsy means "pick for me" (tuned W under auto,
-    W ~ sqrt(K) otherwise).
+    (shape, dtype, draws, has_key, backend, topology): results are
+    memoized process-wide, and draw calls made through the returned plan
+    never re-resolve.  ``W`` falsy means "pick for me" (tuned W under
+    auto, W ~ sqrt(K) otherwise).
+
+    ``mesh=`` makes the plan *sharded*: (B, K) is the global workload,
+    rows shard over the mesh's data axes (``spec=`` overrides the row
+    PartitionSpec), autotune resolves the **per-shard** (B/dev, K) shape,
+    and the topology signature joins the memo key and the tuning-cache
+    bucket — a plan resolved for one topology is never silently reused
+    for another.  ``devices=`` (without a mesh) tags the tuning bucket
+    for callers that are *already* per-shard, e.g. inside a shard_map
+    body (the shape is then NOT divided further).
     """
     # unpack a SamplerSpec-shaped object (duck-typed: configs may not be
     # importable in every context this runs)
     if hasattr(spec_or_shape, "method") and hasattr(spec_or_shape, "W"):
-        spec = spec_or_shape
-        method = method if method not in (None, "auto") else spec.method
-        W = W or (spec.W or None)
-        draws = max(draws, getattr(spec, "draws", 1))
+        sspec = spec_or_shape
+        method = method if method not in (None, "auto") else sspec.method
+        W = W or (sspec.W or None)
+        draws = max(draws, getattr(sspec, "draws", 1))
         spec_or_shape = None
     if hasattr(spec_or_shape, "dtype") and hasattr(spec_or_shape, "shape"):
         dtype = str(spec_or_shape.dtype)
@@ -222,9 +295,34 @@ def plan(
 
     if backend is None:
         backend = jax.default_backend()
+    mesh_sig: Tuple = ()
+    if mesh is not None:
+        from repro.sampling import sharded as _sharded
+
+        nd = _sharded.data_size(mesh, spec)   # validates spec axes too
+        if B % nd:
+            raise ValueError(
+                f"cannot shard B={B} rows over {nd} devices along "
+                f"{_sharded.data_axes(mesh, spec)}: not divisible"
+            )
+        if devices not in (None, nd):
+            raise ValueError(
+                f"devices={devices} contradicts the mesh's {nd} data shards"
+            )
+        devices = nd
+        B_res = B // nd          # autotune sees the per-shard workload
+        mesh_sig = _sharded.mesh_signature(mesh, spec)
+    else:
+        if spec is not None:
+            raise ValueError(
+                "spec= only has meaning with mesh=: an unsharded plan "
+                "would silently ignore it"
+            )
+        devices = int(devices or 1)
+        B_res = B                # caller is already per-shard (or unsharded)
     key = (
         B, K, dtype_name, method, W or 0, int(draws), bool(has_key), backend,
-        bool(factored),
+        bool(factored), int(devices), mesh_sig,
     )
     with _PLAN_LOCK:
         hit = _PLAN_CACHE.get(key)
@@ -241,8 +339,8 @@ def plan(
         with _PLAN_LOCK:
             _STATS["autotune_resolves"] += 1
         res = autotune.get_tuner().resolve_full(
-            B, K, draws=draws, dtype_name=dtype_name, has_key=has_key,
-            factored=factored,
+            B_res, K, draws=draws, dtype_name=dtype_name, has_key=has_key,
+            factored=factored, devices=devices,
         )
         resolved = res.method
         resolved_w = W or res.W
@@ -252,7 +350,7 @@ def plan(
     if not resolved_w:
         resolved_w = _cm.default_w(K)
     if not (tuned_tb and tuned_tk):
-        tuned_tb, tuned_tk = _cm.default_tiles(B, K, int(resolved_w))
+        tuned_tb, tuned_tk = _cm.default_tiles(B_res, K, int(resolved_w))
 
     p = SamplerPlan(
         method=resolved,
@@ -265,6 +363,9 @@ def plan(
         tb=int(tuned_tb),
         tk=int(tuned_tk),
         factored=bool(factored),
+        mesh=mesh,
+        spec=spec,
+        devices=int(devices),
     )
     with _PLAN_LOCK:
         _PLAN_CACHE.setdefault(key, p)

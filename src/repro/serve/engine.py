@@ -13,6 +13,12 @@ every step; the jitted step then draws through the plan's compiled path.
 Multi-draw decode (``make_decode_step(..., num_samples=n)``) samples n
 candidate tokens per sequence from one built distribution per step; for a
 kernel-variant plan all B*n walks run in ONE tiled pass-B launch.
+
+Sharded decode (``make_decode_step(..., mesh=mesh)``) row-shards the
+sequences over the mesh's data axes and samples per shard through the
+shard_map'd kernel path with counter RNG — no collectives on the draw
+path, no per-draw key splitting, and tokens independent of the device
+count for a fixed key (DESIGN.md §5).
 """
 
 from __future__ import annotations
@@ -38,17 +44,20 @@ class GenerationResult:
 
 
 def _logits_plan(cfg: ModelConfig, B: int, V: int, dtype_name: str,
-                 draws: int = 1):
+                 draws: int = 1, mesh=None):
     """The config's sampler spec, planned for a (B, V) logits workload.
 
     ``sampling.plan`` memoizes process-wide, so this resolves autotune on
     the first (shape, dtype) sighting and is a dictionary hit after —
     whether called eagerly (known batch size) or at trace time.
-    ``draws`` is the per-distribution reuse hint (multi-draw decode)."""
+    ``draws`` is the per-distribution reuse hint (multi-draw decode).
+    ``mesh`` makes the plan sharded: sequences row-shard over the mesh's
+    data axes and the sampler runs per shard (the topology is part of the
+    plan memo key, so one engine can serve several meshes)."""
     spec = cfg.sampler_spec
     return sampling.plan(
         (B, V), method=spec.method, W=spec.W or None, dtype=dtype_name,
-        draws=max(spec.draws, draws), has_key=True,
+        draws=max(spec.draws, draws), has_key=True, mesh=mesh,
     )
 
 
@@ -57,6 +66,7 @@ def make_decode_step(
     temperature: float = 1.0,
     batch_size: Optional[int] = None,
     num_samples: int = 1,
+    mesh=None,
 ):
     """Jitted decode step: (params, caches, token, pos, key) ->
     (next_token(s), logits, caches).
@@ -70,18 +80,25 @@ def make_decode_step(
     returns (B, num_samples) candidates, the plan is resolved with the
     reuse hint ``draws=num_samples``, and a kernel-variant plan walks all
     B*num_samples draws in a single tiled pass-B launch (the ``rows``
-    indirection in the kernel) instead of rebuilding tables per draw."""
+    indirection in the kernel) instead of rebuilding tables per draw.
+
+    ``mesh`` makes the decode step *sharded*: sequences (and their
+    logits) row-shard over the mesh's data axes, and the sampler runs as
+    a shard_map of the same tiled kernels with counter RNG — zero
+    collectives on the draw path, tokens bit-identical for any device
+    count at a fixed key (DESIGN.md §5).  Requires ``batch_size`` (or the
+    first traced batch) divisible by the data-shard count."""
     cfg = model.cfg
     if batch_size is not None:
         _logits_plan(cfg, batch_size, cfg.padded_vocab, "float32",
-                     draws=num_samples)
+                     draws=num_samples, mesh=mesh)
 
     @jax.jit
     def step(params, caches, token, pos, key):
         logits, caches = model.decode(params, caches, token, pos)
         p = _logits_plan(
             cfg, logits.shape[0], logits.shape[1], str(logits.dtype),
-            draws=num_samples,
+            draws=num_samples, mesh=mesh,
         )
         nxt = p.sample_logits(
             logits, key, temperature=temperature, num_samples=num_samples
@@ -158,17 +175,20 @@ def generate(
 
 
 def make_serve_step(
-    model: Model, temperature: float = 1.0, batch_size: Optional[int] = None
+    model: Model, temperature: float = 1.0, batch_size: Optional[int] = None,
+    mesh=None,
 ):
     """The dry-run target: one fused decode+sample step as a pure function
-    (params, caches, token, pos, key) -> (next_token, caches)."""
+    (params, caches, token, pos, key) -> (next_token, caches).
+    ``mesh`` shards the sampler like :func:`make_decode_step`."""
     cfg = model.cfg
     if batch_size is not None:
-        _logits_plan(cfg, batch_size, cfg.padded_vocab, "float32")
+        _logits_plan(cfg, batch_size, cfg.padded_vocab, "float32", mesh=mesh)
 
     def serve_step(params, caches, token, pos, key):
         logits, caches = model.decode(params, caches, token, pos)
-        p = _logits_plan(cfg, logits.shape[0], logits.shape[1], str(logits.dtype))
+        p = _logits_plan(cfg, logits.shape[0], logits.shape[1],
+                         str(logits.dtype), mesh=mesh)
         nxt = p.sample_logits(logits, key, temperature=temperature)
         return nxt.astype(jnp.int32), caches
 

@@ -12,3 +12,10 @@ os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(
     tempfile.mkdtemp(prefix="repro-autotune-test-"), "autotune.json"
 )
 os.environ["REPRO_AUTOTUNE"] = "model"
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running tests (multi-device subprocesses, full sweeps)",
+    )

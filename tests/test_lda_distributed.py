@@ -1,6 +1,8 @@
 """Distributed LDA on an 8-host-device mesh (subprocess so XLA_FLAGS can't
 leak): documents shard over 'data', phi replicates, counts all-reduce —
-and the sweep matches the single-device sampler's dynamics."""
+and the sweep matches the single-device sampler's dynamics.  Since the
+shard_map rewrite the z-draw goes through the factored sampling plan with
+counter RNG (see tests/test_sharded_sampler.py for the collective gates)."""
 
 import json
 import os
@@ -9,10 +11,6 @@ import sys
 import textwrap
 
 import pytest
-
-# repro.dist (sharding/fault/compression) is a future subsystem: skip —
-# not collection-error — until it lands (subprocess script imports repro.dist)
-pytest.importorskip("repro.dist", reason="repro.dist not implemented yet")
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
