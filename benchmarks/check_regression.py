@@ -1,0 +1,186 @@
+"""CI perf-regression gate for the sampler benchmarks.
+
+Diffs a freshly generated ``BENCH_sampler*.json`` against the committed
+baseline of the same file: rows are matched on their
+``(method, B, K, W, devices)`` key, the per-key median time is compared,
+and any tracked row slower than ``--threshold`` (default 1.35x) fails the
+job.  A markdown delta table goes to stdout and — when running under
+GitHub Actions — to the step summary (``$GITHUB_STEP_SUMMARY`` or
+``--summary PATH``).
+
+Rows present only in the fresh file (new benchmarks) or only in the
+baseline (retired benchmarks) are reported but never fail the gate — the
+gate guards *tracked* rows, the committed baseline defines what is
+tracked.
+
+Usage (what ``.github/workflows/ci.yml`` runs after each bench step)::
+
+    python benchmarks/check_regression.py BENCH_sampler.json \\
+        fresh/BENCH_sampler.json --threshold 1.35
+
+Exit status: 0 = no tracked row regressed, 1 = regression(s), 2 = the
+comparison itself is unusable (missing/corrupt file, zero overlap).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+Key = Tuple[str, int, int, int, int]
+
+DEFAULT_THRESHOLD = 1.35
+
+
+def row_key(rec: dict) -> Optional[Key]:
+    """The identity a timing row is tracked under across runs."""
+    try:
+        return (
+            str(rec["method"]),
+            int(rec["B"]),
+            int(rec["K"]),
+            int(rec.get("W", 0)),
+            int(rec.get("devices", 1)),
+        )
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+def load_rows(path: str) -> Dict[Key, float]:
+    """Per-key median microseconds from a bench JSON's ``records``."""
+    with open(path) as f:
+        blob = json.load(f)
+    records = blob.get("records", []) if isinstance(blob, dict) else []
+    times: Dict[Key, List[float]] = {}
+    for rec in records:
+        key = row_key(rec)
+        if key is None:
+            continue
+        try:
+            us = float(rec["us"])
+        except (KeyError, TypeError, ValueError):
+            continue
+        times.setdefault(key, []).append(us)
+    return {k: _median(v) for k, v in times.items()}
+
+
+def _median(xs: List[float]) -> float:
+    xs = sorted(xs)
+    n = len(xs)
+    mid = n // 2
+    return xs[mid] if n % 2 else 0.5 * (xs[mid - 1] + xs[mid])
+
+
+def compare(
+    baseline: Dict[Key, float],
+    fresh: Dict[Key, float],
+    threshold: float = DEFAULT_THRESHOLD,
+) -> List[dict]:
+    """Delta rows for every key in either file, sorted worst-first.
+    ``regressed`` is only ever True for keys present in both."""
+    deltas = []
+    for key in sorted(set(baseline) | set(fresh)):
+        base = baseline.get(key)
+        new = fresh.get(key)
+        ratio = (new / base) if base and new else None
+        deltas.append(
+            {
+                "key": key,
+                "baseline_us": base,
+                "fresh_us": new,
+                "ratio": ratio,
+                "regressed": ratio is not None and ratio > threshold,
+            }
+        )
+    deltas.sort(key=lambda d: -(d["ratio"] or 0.0))
+    return deltas
+
+
+def markdown_table(deltas: List[dict], threshold: float, title: str) -> str:
+    lines = [
+        f"### perf gate: {title} (fail > {threshold:.2f}x)",
+        "",
+        "| method | B | K | W | dev | baseline us | fresh us | ratio | |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in deltas:
+        method, B, K, W, dev = d["key"]
+        base = "-" if d["baseline_us"] is None else f"{d['baseline_us']:.0f}"
+        new = "-" if d["fresh_us"] is None else f"{d['fresh_us']:.0f}"
+        if d["ratio"] is None:
+            ratio, flag = "-", "new" if d["baseline_us"] is None else "gone"
+        else:
+            ratio = f"{d['ratio']:.2f}x"
+            flag = "REGRESSED" if d["regressed"] else ""
+        lines.append(
+            f"| {method} | {B} | {K} | {W} | {dev} | {base} | {new} "
+            f"| {ratio} | {flag} |"
+        )
+    return "\n".join(lines) + "\n"
+
+
+def check(
+    baseline_path: str,
+    fresh_path: str,
+    threshold: float = DEFAULT_THRESHOLD,
+    summary_path: Optional[str] = None,
+) -> int:
+    try:
+        baseline = load_rows(baseline_path)
+    except (OSError, ValueError) as e:
+        print(f"cannot read baseline {baseline_path}: {e}", file=sys.stderr)
+        return 2
+    try:
+        fresh = load_rows(fresh_path)
+    except (OSError, ValueError) as e:
+        print(f"cannot read fresh results {fresh_path}: {e}", file=sys.stderr)
+        return 2
+    tracked = set(baseline) & set(fresh)
+    if not tracked:
+        print(
+            f"no overlapping rows between {baseline_path} ({len(baseline)}) "
+            f"and {fresh_path} ({len(fresh)}) — nothing to gate",
+            file=sys.stderr,
+        )
+        return 2
+    deltas = compare(baseline, fresh, threshold)
+    table = markdown_table(deltas, threshold, os.path.basename(baseline_path))
+    print(table)
+    summary_path = summary_path or os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write(table + "\n")
+    regressions = [d for d in deltas if d["regressed"]]
+    if regressions:
+        print(
+            f"FAIL: {len(regressions)} of {len(tracked)} tracked rows "
+            f"regressed beyond {threshold:.2f}x",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"OK: {len(tracked)} tracked rows within {threshold:.2f}x")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed BENCH_*.json baseline")
+    ap.add_argument("fresh", help="freshly generated BENCH_*.json")
+    ap.add_argument(
+        "--threshold", type=float, default=DEFAULT_THRESHOLD,
+        help="fail when fresh/baseline median exceeds this ratio "
+             f"(default {DEFAULT_THRESHOLD})",
+    )
+    ap.add_argument(
+        "--summary", default=None, metavar="PATH",
+        help="append the markdown table here (default: $GITHUB_STEP_SUMMARY)",
+    )
+    args = ap.parse_args(argv)
+    return check(args.baseline, args.fresh, args.threshold, args.summary)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -126,6 +126,57 @@ def run_fused(Bs=(4096,), Ks=(256, 1024, 4096), W=32, iters=5):
     return rows
 
 
+def run_decode(Bs=(256,), Ks=(4096, 16384), W=32, iters=5):
+    """Truncated decode (top-k 64 + top-p 0.9, the llama/gemma-style
+    serving default) at vocab-scale K: the butterfly-native threshold
+    path (value-axis bisection + masked block sums — no sort, no (B, K)
+    sorted copy; the fused kernel on TPU, the XLA twin elsewhere) vs the
+    classic sort-then-sample pipeline (descending sort, cumsum scan,
+    mask, prefix draw).  Rows land under ``decode`` in the JSON and as
+    ``trunc_fused`` / ``trunc_sorted`` records the CI perf gate tracks."""
+    from repro import sampling
+    from repro.sampling import reference as sref
+    from repro.sampling import transforms as str_
+
+    rows = []
+    rng = np.random.default_rng(3)
+    for B in Bs:
+        for K in Ks:
+            logits = jnp.array(rng.normal(0, 2.0, (B, K)).astype(np.float32))
+            u = jnp.array(rng.uniform(0, 1, B).astype(np.float32))
+            key = jax.random.PRNGKey(0)
+            ch = str_.chain(top_k=64, top_p=0.9)
+            sig = str_.signature(ch)          # "kp": what actually runs
+            p = sampling.plan((B, K), method="auto", transforms=sig)
+
+            fused = jax.jit(
+                lambda z, k: p.sample_logits(z, k, temperature=0.8,
+                                             transforms=ch)
+            )
+
+            def sorted_fn(z, uu):
+                w = sampling.logits_to_weights(z, 0.8)
+                return sref.draw_truncated_sorted(w, uu, ch)
+
+            srt = jax.jit(sorted_fn)
+            t_f = _bench(fused, logits, key, iters=iters)
+            t_s = _bench(srt, logits, u, iters=iters)
+            rows.append(
+                dict(
+                    B=B, K=K, W=p.W, tb=p.tb, tk=p.tk, method="trunc_fused",
+                    us=t_f * 1e6, sorted_us=t_s * 1e6, speedup=t_s / t_f,
+                    transforms=sig, resolved=p.method,
+                )
+            )
+            rows.append(
+                dict(
+                    B=B, K=K, W=W, method="trunc_sorted", us=t_s * 1e6,
+                    transforms=sig,
+                )
+            )
+    return rows
+
+
 def run_shard(B_per=1024, Ks=(256, 1024), W=32, iters=5, method="two_level"):
     """Mesh-sharded draw scaling: the same per-shard (B_per, K) workload
     on a 1-device mesh vs. every available device (virtual CPU devices
@@ -215,7 +266,7 @@ def run_reuse(B=4096, K=4096, W=32, draws=16):
 
 
 def write_json(rows, fused_rows=None, path: str = "BENCH_sampler.json",
-               W: int = 32, shard_rows=None) -> str:
+               W: int = 32, shard_rows=None, decode_rows=None) -> str:
     """Emit the rows as autotune-ingestible bench records.  Fused-vs-
     materializing rows land both in ``records`` (the fused timing, so the
     cache learns the factored winner) and, with their materializing
@@ -228,19 +279,23 @@ def write_json(rows, fused_rows=None, path: str = "BENCH_sampler.json",
 
     def _rec(r, W, method, us):
         tb, tk = cost_model.default_tiles(r["B"], r["K"], W)
-        return {
+        rec = {
             "backend": backend, "B": r["B"], "K": r["K"],
             "W": r.get("W", W), "tb": r.get("tb", tb), "tk": r.get("tk", tk),
             "draws": 1, "dtype": "float32", "method": method, "us": us,
             "devices": r.get("devices", 1),
         }
+        if r.get("transforms"):
+            rec["transforms"] = r["transforms"]
+        return rec
 
     blob = {
         "schema": BENCH_SCHEMA,
         "backend": backend,
         "records": [_rec(r, W, r["method"], r["us"]) for r in rows]
         + [_rec(r, W, r["method"], r["us"]) for r in (fused_rows or [])]
-        + [_rec(r, W, r["method"], r["us"]) for r in (shard_rows or [])],
+        + [_rec(r, W, r["method"], r["us"]) for r in (shard_rows or [])]
+        + [_rec(r, W, r["method"], r["us"]) for r in (decode_rows or [])],
         "fused_factored": [
             {
                 "B": r["B"], "K": r["K"], "W": r["W"], "tb": r["tb"],
@@ -256,6 +311,15 @@ def write_json(rows, fused_rows=None, path: str = "BENCH_sampler.json",
                 "oversubscription": r["oversubscription"],
             }
             for r in (shard_rows or [])
+        ],
+        "decode": [
+            {
+                "B": r["B"], "K": r["K"], "W": r["W"],
+                "resolved": r["resolved"], "fused_us": r["us"],
+                "sorted_us": r["sorted_us"], "speedup": r["speedup"],
+            }
+            for r in (decode_rows or [])
+            if r["method"] == "trunc_fused"
         ],
     }
     with open(path, "w") as f:
@@ -281,6 +345,10 @@ def main(argv=None):
                     help="run ONLY the sharded scaling rows — use this in "
                          "a separate virtual-device process so the flag "
                          "never skews the single-device grids")
+    ap.add_argument("--decode", action="store_true",
+                    help="also benchmark truncated decode (top-k/top-p via "
+                         "the butterfly threshold path) against the "
+                         "sort-then-sample baseline at vocab-scale K")
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized run: fewer iterations and shapes")
     args = ap.parse_args(argv)
@@ -290,11 +358,17 @@ def main(argv=None):
     iters = 2 if args.quick else 5
     Ks = (256, 1024) if args.quick else (64, 256, 1024, 4096)
     Bs = (1024,) if args.quick else (4096,)
-    rows, fused_rows = [], []
+    rows, fused_rows, decode_rows = [], [], []
     if not args.shard_only:
         rows = run(Bs=Bs, Ks=Ks, iters=iters)
         fused_rows = run_fused(Bs=Bs, Ks=tuple(k for k in Ks if k >= 256),
                                iters=iters)
+    if args.decode and not args.shard_only:
+        decode_rows = run_decode(
+            Bs=(64,) if args.quick else (256,),
+            Ks=(4096,) if args.quick else (4096, 16384),
+            iters=iters,
+        )
     shard_rows = None
     if args.shard or args.shard_only:
         shard_rows = run_shard(
@@ -314,6 +388,14 @@ def main(argv=None):
             f"materializing_us={r['materializing_us']:.0f};"
             f"speedup={r['speedup']:.2f}x"
         )
+    for r in decode_rows:
+        if r["method"] != "trunc_fused":
+            continue
+        print(
+            f"trunc_decode_B{r['B']}_K{r['K']},{r['us']:.0f},"
+            f"sorted_us={r['sorted_us']:.0f};speedup={r['speedup']:.2f}x;"
+            f"resolved={r['resolved']}"
+        )
     if shard_rows:
         for r in shard_rows:
             print(
@@ -329,7 +411,8 @@ def main(argv=None):
                 f"speedup={r['speedup']:.2f}x"
             )
     if not args.no_json:
-        path = write_json(rows, fused_rows, args.json, shard_rows=shard_rows)
+        path = write_json(rows, fused_rows, args.json, shard_rows=shard_rows,
+                          decode_rows=decode_rows)
         print(f"# wrote {path} ({BENCH_SCHEMA}; feed to autotune_bench --import)")
 
 

@@ -9,13 +9,14 @@ On-disk format (``~/.cache/repro/autotune.json`` by default, overridable
 via ``$REPRO_AUTOTUNE_CACHE``)::
 
     {
-      "schema": "repro-autotune-v3",
+      "schema": "repro-autotune-v4",
       "entries": {
         "cpu|B4096|K1024|d1|float32|key": {
           "method": "two_level", "W": 32, "tb": 8, "tk": 512, "us": 184.2,
           "source": "measured" | "model" | "bench"
         },
         "cpu|B512|K1024|d1|float32|key|dev8": {...},
+        "tpu|B512|K131072|d1|float32|key|tr:kpm": {...},
         ...
       }
     }
@@ -48,10 +49,13 @@ import tempfile
 import threading
 from typing import Dict, Iterable, List, Optional
 
-SCHEMA = "repro-autotune-v3"
+SCHEMA = "repro-autotune-v4"
 # older cache files we still read (v1 entries lack the v2 tile fields,
-# v1/v2 keys lack the v3 |dev suffix == the devices=1 bucket)
-COMPAT_SCHEMAS = ("repro-autotune-v1", "repro-autotune-v2", SCHEMA)
+# v1/v2 keys lack the v3 |dev suffix == the devices=1 bucket, v1-v3 keys
+# lack the v4 |tr: suffix == the untruncated bucket)
+COMPAT_SCHEMAS = (
+    "repro-autotune-v1", "repro-autotune-v2", "repro-autotune-v3", SCHEMA,
+)
 BENCH_SCHEMA = "repro-autotune-bench-v1"
 
 # precedence when deciding whether a new record may overwrite an old one
@@ -75,7 +79,7 @@ def _bucket(n: int) -> int:
 
 def bucket_key(
     backend: str, B: int, K: int, draws: int, dtype: str, has_key: bool = True,
-    factored: bool = False, devices: int = 1,
+    factored: bool = False, devices: int = 1, transforms: str = "",
 ) -> str:
     """Shape-bucket cache key.  ``has_key`` is part of the key: callers
     without a PRNG key have a smaller candidate set (no gumbel/alias), so
@@ -85,13 +89,20 @@ def bucket_key(
     separately for the same reason.  ``devices`` (v3) marks mesh-sharded
     buckets: ``B`` is then the per-shard row count, and the ``|devN``
     suffix keeps topology winners out of the single-device bucket
-    (``devices=1`` emits no suffix, so v1/v2 entries keep matching)."""
+    (``devices=1`` emits no suffix, so v1/v2 entries keep matching).
+    ``transforms`` (v4) is the truncation-chain signature (e.g. ``kpm``
+    for top-k -> top-p -> min-p): truncated decode admits the fused
+    ``kernel_trunc`` candidate and pays threshold-search costs the plain
+    draw doesn't, so it tunes in its own ``|tr:SIG`` bucket (no suffix ==
+    the untruncated bucket, so v1-v3 entries keep matching)."""
     kd = "key" if has_key else "nokey"
     base = f"{backend}|B{_bucket(B)}|K{_bucket(K)}|d{_bucket(draws)}|{dtype}|{kd}"
     if factored:
         base += "|fac"
     if devices and devices > 1:
         base += f"|dev{_bucket(devices)}"
+    if transforms:
+        base += f"|tr:{transforms}"
     return base
 
 
@@ -235,11 +246,18 @@ class TuningCache:
         # considers methods a u-based caller can run; factored methods
         # only compete in the factored buckets (and vice versa)
         from repro.autotune.cost_model import FACTORED_METHODS
-        from repro.autotune.tuner import KEY_METHODS
+        from repro.autotune.tuner import KEY_METHODS, KNOWN_METHODS
 
         best: Dict[str, Dict] = {}
         for r in records:
             try:
+                # only resolvable strategies may become bucket winners: a
+                # bench file also carries comparison pseudo-rows (e.g.
+                # trunc_sorted, the sort-then-sample baseline) whose names
+                # no resolver can run — ingesting one would wedge its
+                # bucket on an entry resolve_full must discard forever
+                if r["method"] not in KNOWN_METHODS:
+                    continue
                 us = float(r["us"])
                 factored = r["method"] in FACTORED_METHODS
                 for has_key in (True, False):
@@ -250,6 +268,7 @@ class TuningCache:
                         r.get("draws", 1), r.get("dtype", "float32"),
                         has_key=has_key, factored=factored,
                         devices=int(r.get("devices", 1)),
+                        transforms=str(r.get("transforms", "")),
                     )
                     if key not in best or us < best[key]["us"]:
                         best[key] = {"method": r["method"],

@@ -119,6 +119,19 @@ FACTORED_METHODS = ("lda_kernel",)
 # write the flat row) before the method's own build reads it back
 FACTOR_MATERIALIZE_EQ = 2.0
 
+# truncated-decode terms (DESIGN.md §7).  Truncation is a per-row value
+# threshold found by bisection; viable strategies pay for that search.
+TRUNC_ITERS = 32
+# variants that fold the search into the fused draw; candidates only when
+# the workload declares a truncation chain (tuner ``truncated=True``)
+TRUNCATED_METHODS = ("kernel_trunc",)
+# per-element-per-iteration byte-equivalent of the in-kernel bisection:
+# masked reductions over an already-VMEM-resident tile (compute, no HBM)
+TRUNC_VMEM_EQ = 0.05
+# per-element-per-iteration byte-equivalent of the XLA threshold twin,
+# whose masked reductions re-stream the weights from HBM/cache
+TRUNC_XLA_EQ = 0.25
+
 
 def method_cost_eq(
     method: str,
@@ -129,6 +142,7 @@ def method_cost_eq(
     dtype_bytes: int = 4,
     backend: str = "cpu",
     factored: bool = False,
+    truncated: bool = False,
 ) -> float:
     """Effective bytes per row for one draw, with the table build amortized
     over ``draws`` uses of the same distribution.
@@ -142,6 +156,13 @@ def method_cost_eq(
     a (theta, phi) product: flat-weight methods pay the materialization
     surcharge (``FACTOR_MATERIALIZE_EQ * K``) on top of their own build,
     the factored methods build straight from the factor rows.
+
+    ``truncated=True`` costs the truncated-decode workload (a
+    top-k/top-p/min-p chain precedes the draw): ordinary methods pay the
+    XLA threshold search (``TRUNC_ITERS`` masked re-streams of the row)
+    plus the masked rewrite; ``kernel_trunc`` folds the search into the
+    fused draw's VMEM-resident tile and pays only the in-kernel compute
+    equivalent.
     """
     bp = backend_params(backend)
     c = float(dtype_bytes)
@@ -150,6 +171,16 @@ def method_cost_eq(
     log2K = math.log2(max(K, 2))
     log2W = math.log2(max(W, 2))
 
+    if method == "kernel_trunc":
+        if not truncated:
+            raise ValueError(
+                "kernel_trunc is only viable on truncated-decode workloads"
+            )
+        base = method_cost_eq(
+            "kernel", K, W=W, draws=draws, dtype_bytes=dtype_bytes,
+            backend=backend, factored=factored,
+        )
+        return base + TRUNC_ITERS * K * TRUNC_VMEM_EQ
     if method == "lda_kernel":
         if not factored:
             raise ValueError("lda_kernel is only viable on factored workloads")
@@ -177,7 +208,7 @@ def method_cost_eq(
     elif method == "kernel":
         base = method_cost_eq(
             "two_level", K, W=W, draws=d, dtype_bytes=dtype_bytes,
-            backend=backend, factored=factored,
+            backend=backend, factored=factored, truncated=truncated,
         )
         if not bp.has_pallas:
             # interpret mode: every Pallas op is a Python-level emulation
@@ -195,6 +226,10 @@ def method_cost_eq(
         raise ValueError(f"cost model knows no method {method!r}")
     if factored:
         build = build + FACTOR_MATERIALIZE_EQ * K * c
+    if truncated:
+        # XLA threshold bisection re-streams the row per iteration, then
+        # writes (and the build re-reads) the masked copy
+        build = build + TRUNC_ITERS * K * c * TRUNC_XLA_EQ + 2.0 * K * c
     return build / d + draw
 
 
@@ -208,12 +243,13 @@ def predict_us(
     dtype_bytes: int = 4,
     backend: str = "cpu",
     factored: bool = False,
+    truncated: bool = False,
 ) -> float:
     """Predicted microseconds for one (B, K) draw batch."""
     bp = backend_params(backend)
     eq = method_cost_eq(
         method, K, W=W, draws=draws, dtype_bytes=dtype_bytes, backend=backend,
-        factored=factored,
+        factored=factored, truncated=truncated,
     )
     return bp.launch_us + B * eq / (bp.bandwidth_gbps * 1e3)
 
@@ -227,13 +263,15 @@ def rank_methods(
     dtype_bytes: int = 4,
     backend: str = "cpu",
     factored: bool = False,
+    truncated: bool = False,
 ) -> List[Tuple[float, str, int]]:
     """Sort candidate methods by predicted cost: [(us, method, W), ...]."""
     W = default_w(K)
     ranked = [
         (
             predict_us(m, B, K, W=W, draws=draws, dtype_bytes=dtype_bytes,
-                       backend=backend, factored=factored),
+                       backend=backend, factored=factored,
+                       truncated=truncated),
             m,
             W,
         )
@@ -252,10 +290,11 @@ def choose(
     dtype_bytes: int = 4,
     backend: str = "cpu",
     factored: bool = False,
+    truncated: bool = False,
 ) -> Tuple[str, int, float]:
     """Best (method, W, predicted_us) among ``candidates``."""
     us, method, W = rank_methods(
         candidates, B, K, draws=draws, dtype_bytes=dtype_bytes, backend=backend,
-        factored=factored,
+        factored=factored, truncated=truncated,
     )[0]
     return method, W, us

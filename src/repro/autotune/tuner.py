@@ -45,6 +45,11 @@ from repro.autotune.cache import TuningCache, bucket_key
 U_METHODS = ("prefix", "fenwick", "two_level", "butterfly")
 # methods that need a PRNG key — candidates only when the caller has one
 KEY_METHODS = ("gumbel", "alias")
+# every strategy any resolver can ever return — the ingest whitelist
+# (bench files also carry non-runnable comparison pseudo-rows)
+KNOWN_METHODS = U_METHODS + KEY_METHODS + (
+    "kernel", "kernel_trunc", "lda_kernel",
+)
 
 MODES = ("measure", "model", "off")
 
@@ -84,19 +89,26 @@ def _tracing_active() -> bool:
 
 
 def candidate_methods(
-    B: int, K: int, backend: str, has_key: bool, factored: bool = False
+    B: int, K: int, backend: str, has_key: bool, factored: bool = False,
+    transforms: str = "",
 ) -> Tuple[str, ...]:
     """All viable strategies for this workload: core u-based methods,
     key-based methods when a key is available, plus whatever the kernels
     registry says runs well on this backend.  ``factored=True`` (the
     weights arrive as a theta-phi product — the LDA z-draw) additionally
-    admits the fused factored kernels."""
+    admits the fused factored kernels; a non-empty ``transforms``
+    signature (a truncated-decode workload) admits the fused truncated
+    variants (``kernel_trunc``)."""
     from repro import kernels
 
     cands = list(U_METHODS)
     if has_key:
         cands.extend(KEY_METHODS)
-    cands.extend(kernels.candidates(B, K, backend, factored=factored))
+    cands.extend(
+        kernels.candidates(
+            B, K, backend, factored=factored, truncated=bool(transforms)
+        )
+    )
     return tuple(dict.fromkeys(cands))  # dedupe, keep order
 
 
@@ -111,6 +123,7 @@ def measure_method(
     warmup: int = 1,
     seed: int = 0,
     factored: bool = False,
+    truncated: bool = False,
 ) -> Optional[float]:
     """Median wall-clock microseconds of one jitted (B, K) draw batch on
     synthetic weights; ``None`` if the method fails on this shape.
@@ -119,7 +132,13 @@ def measure_method(
     weights arrive as a theta-phi product, so flat-weight methods are
     timed *including* the gather + (B, K) materialization they really
     pay there — otherwise measure mode would systematically undercount
-    them against ``lda_kernel``."""
+    them against ``lda_kernel``.
+
+    ``truncated=True`` times the truncated-decode workload at a
+    representative (top_k, top_p) = (max(K//8, 1), 0.9): ``kernel_trunc``
+    runs its fused threshold+draw; every other method is timed
+    *including* the XLA threshold search + masking it really pays
+    there."""
     import jax
     import jax.numpy as jnp
 
@@ -130,6 +149,11 @@ def measure_method(
     w = jnp.asarray(rng.uniform(0.1, 1.0, size=(B, K)), dtype=dtype)
     u = jnp.asarray(rng.uniform(0.0, 1.0, size=(B,)), jnp.float32)
     key = jax.random.PRNGKey(seed)
+    if truncated:
+        from repro.sampling import transforms as _tr
+
+        trunc_chain = _tr.chain(top_k=max(K // 8, 1), top_p=0.9)
+        kpm = _tr.canonical_params(trunc_chain, B)
     if factored:
         # an LDA-shaped factorization at the real (B, K)
         C, V = max(1, B // 32), 64
@@ -139,7 +163,36 @@ def measure_method(
         words = jnp.asarray(rng.integers(0, V, size=(B,)), jnp.int32)
 
     try:
-        if method in cost_model.FACTORED_METHODS:
+        if method == "kernel_trunc":
+            if not truncated:
+                return None
+            from repro.kernels.butterfly_sample import ops as _kops
+
+            fn = jax.jit(
+                lambda w, uu: _kops.butterfly_sample_truncated(
+                    w, uu, kpm, W=W
+                )
+            )
+            args = (w, u)
+        elif truncated and method not in KEY_METHODS and not factored:
+            from repro.sampling import transforms as _tr
+
+            fn = jax.jit(
+                lambda w, uu: _api.sample_categorical(
+                    _tr.apply(w, trunc_chain), u=uu, method=method, W=W
+                )
+            )
+            args = (w, u)
+        elif truncated and method in KEY_METHODS and not factored:
+            from repro.sampling import transforms as _tr
+
+            fn = jax.jit(
+                lambda w, k: _api.sample_categorical(
+                    _tr.apply(w, trunc_chain), key=k, method=method, W=W
+                )
+            )
+            args = (w, key)
+        elif method in cost_model.FACTORED_METHODS:
             if not factored:
                 return None
             from repro.kernels.lda_draw import lda_draw_factored
@@ -223,12 +276,14 @@ class Tuner:
         has_key: bool = True,
         factored: bool = False,
         devices: int = 1,
+        transforms: str = "",
         candidates: Optional[Sequence[str]] = None,
     ) -> Tuple[str, int]:
         """Back-compat (method, W) resolution; see :meth:`resolve_full`."""
         return self.resolve_full(
             B, K, draws=draws, dtype_name=dtype_name, has_key=has_key,
-            factored=factored, devices=devices, candidates=candidates,
+            factored=factored, devices=devices, transforms=transforms,
+            candidates=candidates,
         ).pair()
 
     def resolve_full(
@@ -241,6 +296,7 @@ class Tuner:
         has_key: bool = True,
         factored: bool = False,
         devices: int = 1,
+        transforms: str = "",
         candidates: Optional[Sequence[str]] = None,
     ) -> Resolution:
         """Full resolution including the tiled-kernel ``tb``/``tk``
@@ -250,17 +306,28 @@ class Tuner:
         ``devices > 1`` marks a mesh-sharded workload: ``B`` is the
         *per-shard* row count (the shape the shard's kernels actually
         launch with — that is what candidates are measured/modeled at)
-        and the winner lands in the topology's own v3 cache bucket."""
+        and the winner lands in the topology's own v3 cache bucket.
+
+        A non-empty ``transforms`` signature (``"k"``/``"kp"``/``"kpm"``
+        ... — see ``repro.sampling.transforms.signature``) marks a
+        truncated-decode workload: the fused truncated kernel joins the
+        candidate set, every candidate is costed *including* its
+        threshold-search surcharge, and the winner lands in the
+        signature's own v4 cache bucket."""
         backend = self.backend
         cands = tuple(
             candidates
             if candidates is not None
-            else candidate_methods(B, K, backend, has_key, factored=factored)
+            else candidate_methods(
+                B, K, backend, has_key, factored=factored,
+                transforms=transforms,
+            )
         )
         mode = self.mode
+        truncated = bool(transforms)
         key = bucket_key(
             backend, B, K, draws, dtype_name, has_key=has_key,
-            factored=factored, devices=devices,
+            factored=factored, devices=devices, transforms=transforms,
         )
 
         if mode != "off":
@@ -280,13 +347,13 @@ class Tuner:
         if mode == "measure" and not _tracing_active():
             method, W, us = self._tune(
                 cands, B, K, draws, dtype_name, dtype_bytes, backend,
-                factored=factored,
+                factored=factored, truncated=truncated,
             )
             source = "measured"
         else:
             method, W, us = cost_model.choose(
                 cands, B, K, draws=draws, dtype_bytes=dtype_bytes,
-                backend=backend, factored=factored,
+                backend=backend, factored=factored, truncated=truncated,
             )
             source = "model"
         tb, tk = cost_model.default_tiles(B, K, W)
@@ -296,7 +363,7 @@ class Tuner:
         return Resolution(method=method, W=W, tb=tb, tk=tk, source=source)
 
     def _tune(self, cands, B, K, draws, dtype_name, dtype_bytes, backend,
-              factored=False):
+              factored=False, truncated=False):
         """Time every candidate at the bucket's representative shape (the
         blocked methods at a small W sweep around the model's guess); fall
         back to the cost model if everything fails (e.g. OOM shapes)."""
@@ -304,13 +371,14 @@ class Tuner:
 
         dtype = jnp.dtype(dtype_name)
         w_guess = cost_model.default_w(K)
-        blocked = ("fenwick", "two_level", "butterfly", "kernel", "lda_kernel")
+        blocked = ("fenwick", "two_level", "butterfly", "kernel",
+                   "kernel_trunc", "lda_kernel")
         best = None
         for method in cands:
             ws = sorted({w_guess, 32}) if method in blocked else (w_guess,)
             for W in ws:
                 us = measure_method(method, B, K, W, dtype=dtype,
-                                    factored=factored)
+                                    factored=factored, truncated=truncated)
                 if us is None:
                     continue
                 if draws > 1 and method in cost_model.CACHED_TABLE_METHODS:
@@ -328,7 +396,7 @@ class Tuner:
         if best is None:
             method, W, us = cost_model.choose(
                 cands, B, K, draws=draws, dtype_bytes=dtype_bytes,
-                backend=backend, factored=factored,
+                backend=backend, factored=factored, truncated=truncated,
             )
             return method, W, us
         us, method, W = best

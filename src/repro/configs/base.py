@@ -22,11 +22,25 @@ class SamplerSpec:
     gumbel | alias.  ``W = 0`` means "pick for me" (the tuned W under
     auto, W ~ sqrt(K) for fixed methods).  ``draws`` is the
     expected-uses-per-distribution hint autotune amortizes table builds
-    over (1 for decode: logits change every step)."""
+    over (1 for decode: logits change every step).
+
+    ``top_k``/``top_p``/``min_p`` are the model's *default* truncation
+    (what its model card recommends for decode); disabled at 0 / 1.0 / 0.
+    The serve engine lifts them into a ``SamplingParams`` default that
+    per-request parameters override at call time — they also shape the
+    autotune bucket (a truncating workload tunes toward the fused
+    truncated kernel; see ``repro.sampling.transforms``)."""
 
     method: str = "auto"
     W: int = 0
     draws: int = 1
+    top_k: int = 0
+    top_p: float = 1.0
+    min_p: float = 0.0
+
+    @property
+    def truncates(self) -> bool:
+        return self.top_k > 0 or self.top_p < 1.0 or self.min_p > 0.0
 
 
 @dataclasses.dataclass(frozen=True)

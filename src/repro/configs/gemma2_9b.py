@@ -7,7 +7,11 @@ embeddings; GeGLU.  head_dim=256 (qkv wider than d_model, per the paper).
 long_500k is skipped: the global layers are full attention (DESIGN.md §4).
 """
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, SamplerSpec
+
+# gemma2 generation config: top-k 64 + top-p 0.95 (hf defaults) — the
+# 256k vocab is exactly where the fused truncated draw's no-sort path pays
+_SAMPLER = SamplerSpec(method="auto", top_k=64, top_p=0.95)
 
 CONFIG = ModelConfig(
     name="gemma2-9b", family="dense", num_layers=42, d_model=3584,
@@ -15,6 +19,7 @@ CONFIG = ModelConfig(
     head_dim=256, sliding_window=4096, layer_pattern="local_global",
     attn_softcap=50.0, final_softcap=30.0, post_norms=True,
     tie_embeddings=True, embedding_scale=True, act="gelu",
+    sampler=_SAMPLER,
 )
 
 SMOKE = ModelConfig(
@@ -22,5 +27,5 @@ SMOKE = ModelConfig(
     num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128, head_dim=32,
     sliding_window=16, layer_pattern="local_global", attn_softcap=50.0,
     final_softcap=30.0, post_norms=True, tie_embeddings=True,
-    embedding_scale=True, act="gelu",
+    embedding_scale=True, act="gelu", sampler=_SAMPLER,
 )

@@ -28,6 +28,9 @@ class KernelCandidate:
     # factored candidates need the workload's weights as a (theta, phi)
     # product — only offered when the caller says factored=True
     factored: bool = False
+    # truncated candidates fold a top-k/top-p/min-p threshold pass into
+    # the draw — only offered when the caller declares a truncation chain
+    truncated: bool = False
 
 
 _REGISTRY: Tuple[KernelCandidate, ...] = (
@@ -38,6 +41,16 @@ _REGISTRY: Tuple[KernelCandidate, ...] = (
         # (including GPU) would silently run the interpret-mode emulation
         available=lambda B, K, backend: backend == "tpu" and K >= 2,
         description="fused tiled butterfly draw (block selection in-kernel)",
+    ),
+    KernelCandidate(
+        method="kernel_trunc",
+        module="repro.kernels.butterfly_sample",
+        available=lambda B, K, backend: backend == "tpu" and K >= 2,
+        description=(
+            "fused truncated decode draw (top-k/top-p/min-p threshold "
+            "bisection in-kernel — no sort, no (B, K) sorted copy)"
+        ),
+        truncated=True,
     ),
     KernelCandidate(
         method="lda_kernel",
@@ -52,18 +65,23 @@ _REGISTRY: Tuple[KernelCandidate, ...] = (
 
 
 def candidates(
-    B: int, K: int, backend: Optional[str] = None, factored: bool = False
+    B: int, K: int, backend: Optional[str] = None, factored: bool = False,
+    truncated: bool = False,
 ) -> Tuple[str, ...]:
     """Kernel-backed method names viable for a (B, K) draw on ``backend``
     (default: the current JAX backend).  ``factored=True`` adds the
-    strategies that consume a (theta, phi) factorization directly."""
+    strategies that consume a (theta, phi) factorization directly;
+    ``truncated=True`` adds the fused truncated-decode strategies (the
+    workload declares a top-k/top-p/min-p chain)."""
     if backend is None:
         import jax
 
         backend = jax.default_backend()
     return tuple(
         c.method for c in _REGISTRY
-        if c.available(B, K, backend) and (factored or not c.factored)
+        if c.available(B, K, backend)
+        and (factored or not c.factored)
+        and (truncated or not c.truncated)
     )
 
 

@@ -356,6 +356,387 @@ def sample_from_block_sums_rng_pallas(
 
 
 # ---------------------------------------------------------------------------
+# Fused truncated decode: top-k/top-p/min-p folded into the draw (no sort)
+# ---------------------------------------------------------------------------
+#
+# Truncation is a per-row value threshold (repro.sampling.transforms), and
+# a threshold is found by bisection on the value axis — so the fused draw
+# gains one extra in-VMEM phase instead of a (B, K) sort: the weight tile
+# is already resident for pass A, each bisection step is one masked
+# reduction over it, and the masked tile feeds the same block-sum/select/
+# walk pipeline.  No sorted copy, no extra HBM sweep (DESIGN.md §7).
+
+
+def _trunc_tile(w, params, iters: int) -> jnp.ndarray:
+    """Truncate a (TB, Kp) weight tile in VMEM by its rows' canonical
+    ``[k, p, min_p]`` parameter triple (sequential semantics: top-p sees
+    only the top-k survivors).  Disabled stages (k <= 0, p >= 1,
+    min_p <= 0) pass through; returns the masked tile.
+
+    The threshold math is :func:`repro.sampling.transforms
+    .thresholds_from_params` itself — pure jnp reductions plus a
+    ``fori_loop`` bisection over uint32 float bit patterns, which traces
+    inside the Pallas kernel body exactly as it does in XLA.  One
+    implementation means the fused mask can never drift from the twin
+    (or the sorted oracle) by a boundary/tie semantic fixed in only one
+    place."""
+    from repro.sampling import transforms as _tr
+
+    tau = _tr.thresholds_from_params(w, params, iters=iters)
+    return jnp.where(w >= tau[:, None], w, 0.0)
+
+
+def _fused_trunc_draw_kernel(w_ref, u_ref, prm_ref, out_ref, *, W: int, iters: int):
+    w = w_ref[...].astype(jnp.float32)
+    wm = _trunc_tile(w, prm_ref[...].astype(jnp.float32), iters)
+    out_ref[:, 0] = _draw_tile(wm, u_ref[:, 0].astype(jnp.float32), W)
+
+
+def fused_trunc_draw_pallas(
+    wp: jnp.ndarray,
+    u: jnp.ndarray,
+    params: jnp.ndarray,
+    W: int,
+    tb: int,
+    iters: int,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """One-kernel truncated draw over padded (Bp, Kp) weights: threshold
+    search + masking + block sums + selection + walk, all on the one
+    VMEM-resident tile.  ``params`` is (Bp, 3) float32 ``[k, p, min_p]``
+    rows (traced — per-row heterogeneous truncation in one executable)."""
+    interpret = runtime.resolve_interpret(interpret)
+    Bp, Kp = wp.shape
+    out = pl.pallas_call(
+        functools.partial(_fused_trunc_draw_kernel, W=W, iters=iters),
+        grid=(Bp // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, Kp), lambda i: (i, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tb, 3), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(wp, u[:, None], params)
+    return out[:, 0]
+
+
+def _fused_trunc_draw_rng_kernel(
+    meta_ref, prm_ref, w_ref, out_ref, *, W: int, tb: int, iters: int
+):
+    """Truncated fused draw with in-kernel counter RNG (the sharded/serve
+    fast path): uniforms from (seed, global row) Threefry counters, then
+    the same in-VMEM threshold + draw pipeline."""
+    i = pl.program_id(0)
+    s0, s1, off = meta_ref[0, 0], meta_ref[0, 1], meta_ref[0, 2]
+    tile0 = off + jnp.uint32(i * tb)
+    rows = tile0 + jax.lax.broadcasted_iota(jnp.uint32, (tb, 1), 0)[:, 0]
+    b0, _ = _rng.threefry2x32(s0, s1, rows, jnp.zeros_like(rows))
+    u = _rng.bits_to_uniform(b0)
+    w = w_ref[...].astype(jnp.float32)
+    wm = _trunc_tile(w, prm_ref[...].astype(jnp.float32), iters)
+    out_ref[:, 0] = _draw_tile(wm, u, W)
+
+
+def fused_trunc_draw_rng_pallas(
+    wp: jnp.ndarray,
+    seed: jnp.ndarray,
+    row_offset,
+    params: jnp.ndarray,
+    W: int,
+    tb: int,
+    iters: int,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    interpret = runtime.resolve_interpret(interpret)
+    Bp, Kp = wp.shape
+    meta = jnp.concatenate(
+        [
+            jnp.asarray(seed, jnp.uint32).reshape(2),
+            jnp.asarray(row_offset).astype(jnp.uint32).reshape(1),
+        ]
+    ).reshape(1, 3)
+    out = pl.pallas_call(
+        functools.partial(_fused_trunc_draw_rng_kernel, W=W, tb=tb, iters=iters),
+        grid=(Bp // tb,),
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+            pl.BlockSpec((tb, 3), lambda i: (i, 0)),
+            pl.BlockSpec((tb, Kp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 1), jnp.int32),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(meta, params, wp)
+    return out[:, 0]
+
+
+# -- two-pass truncated route (vocab-scale tiles): masked pass A + walk ----
+
+
+def _masked_blocksum_kernel(w_ref, tau_ref, out_ref, *, W: int):
+    """Pass A over *masked* weights: the truncation mask is applied to the
+    streamed (tb, tk) tile in VMEM — the masked (B, K) matrix never hits
+    HBM."""
+    w = w_ref[...].astype(jnp.float32)
+    tau = tau_ref[:, 0].astype(jnp.float32)
+    wm = jnp.where(w >= tau[:, None], w, 0.0)
+    tb, tk = w.shape
+    out_ref[...] = wm.reshape(tb, tk // W, W).sum(axis=-1)
+
+
+def masked_blocksums_pallas(
+    weights: jnp.ndarray,
+    tau: jnp.ndarray,
+    W: int,
+    tb: int,
+    tk: int,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    interpret = runtime.resolve_interpret(interpret)
+    B, K = weights.shape
+    grid = (B // tb, K // tk)
+    return pl.pallas_call(
+        functools.partial(_masked_blocksum_kernel, W=W),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, tk), lambda i, j: (i, j)),
+            pl.BlockSpec((tb, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, tk // W), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, K // W), jnp.float32),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(weights, tau[:, None])
+
+
+def _walk_trunc_kernel(
+    rows_ref, jb_ref, wblk_ref, run_ref, u_ref, tau_ref, out_ref,
+    blk_acc, run_acc, *, W: int, TB: int,
+):
+    """Masked pass B: identical to ``_walk_kernel`` except the streamed
+    raw W-blocks are re-masked by their row's threshold before the
+    Fenwick build (the running sums arrive masked from masked pass A, so
+    stop/lo/jb are consistent with the masked distribution)."""
+    r = pl.program_id(1)
+    blk_acc[r, :] = wblk_ref[0, :].astype(jnp.float32)
+    run_acc[r, :] = run_ref[0, :].astype(jnp.float32)
+
+    @pl.when(r == TB - 1)
+    def _walk():
+        running = run_acc[...]
+        stop = running[:, -1] * u_ref[:, 0].astype(jnp.float32)
+        jb, lo = _select_tile(running, stop, W)
+        blk = blk_acc[...]
+        tau = tau_ref[:, 0].astype(jnp.float32)
+        blk = jnp.where(blk >= tau[:, None], blk, 0.0)
+        t = _fenwick_tile(blk, W)
+        R = _descent_tile(t, stop, lo, W)
+        out_ref[:, 0] = jb * W + R
+
+
+def walk_trunc_pallas(
+    wp: jnp.ndarray,
+    running: jnp.ndarray,
+    u: jnp.ndarray,
+    tau: jnp.ndarray,
+    rows: jnp.ndarray,
+    jb: jnp.ndarray,
+    W: int,
+    tb: int,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Tiled masked pass B; ``tau`` has length Bt like ``u``/``rows``
+    (already gathered per sample for multi-draw)."""
+    interpret = runtime.resolve_interpret(interpret)
+    Bt = u.shape[0]
+    nb = running.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Bt // tb, tb),
+        in_specs=[
+            pl.BlockSpec(
+                (1, W), lambda i, r, rows_ref, jb_ref: (
+                    rows_ref[i * tb + r], jb_ref[i * tb + r]
+                )
+            ),
+            pl.BlockSpec(
+                (1, nb), lambda i, r, rows_ref, jb_ref: (rows_ref[i * tb + r], 0)
+            ),
+            pl.BlockSpec((tb, 1), lambda i, r, rows_ref, jb_ref: (i, 0)),
+            pl.BlockSpec((tb, 1), lambda i, r, rows_ref, jb_ref: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, 1), lambda i, r, rows_ref, jb_ref: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((tb, W), jnp.float32),
+            pltpu.VMEM((tb, nb), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_walk_trunc_kernel, W=W, TB=tb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Bt, 1), jnp.int32),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        rows.astype(jnp.int32), jb.astype(jnp.int32),
+        wp, running, u.astype(jnp.float32)[:, None],
+        tau.astype(jnp.float32)[:, None],
+    )
+    return out[:, 0]
+
+
+def _build_masked_sums_impl(weights, tau, W: int, tb: int, tk: int, interpret):
+    """Masked pass A: pad, masked blocksums, running sums.  Padded rows
+    carry tau = 0, so their all-zero weights stay all-zero sums."""
+    B, K = weights.shape
+    tk = max(W, min(tk, int(np.ceil(K / W)) * W))
+    if tk % W:
+        raise ValueError(f"tk={tk} must be a multiple of W={W}")
+    padB = (-B) % tb
+    padK = (-K) % tk
+    wp = jnp.pad(weights, ((0, padB), (0, padK)))
+    taup = jnp.pad(tau.astype(jnp.float32), (0, padB))
+    bs = masked_blocksums_pallas(wp, taup, W, tb, tk, interpret=interpret)
+    running = jnp.cumsum(bs, axis=1)
+    return wp, taup, running
+
+
+def _trunc_draw_from_sums_impl(
+    wp, taup, running, u, B: int, K: int, W: int, tb: int, interpret
+):
+    """Masked pass B with the multi-draw ``rows`` indirection; mirrors
+    ``_draw_from_sums_impl`` plus the per-sample threshold gather."""
+    multi = u.ndim == 2
+    S = u.shape[0] if multi else 1
+    uf = u.reshape(-1).astype(jnp.float32)
+    rows = jnp.tile(jnp.arange(B, dtype=jnp.int32), S)
+    Bt = S * B
+    padT = (-Bt) % tb
+    if padT:
+        uf = jnp.pad(uf, (0, padT))
+        rows = jnp.pad(rows, (0, padT))
+    jb = _block_search(running[rows], uf)
+    tau_s = taup[rows]
+    idx = walk_trunc_pallas(
+        wp, running, uf, tau_s, rows, jb, W, tb, interpret=interpret
+    )
+    idx = jnp.minimum(idx[:Bt], K - 1)
+    return idx.reshape(S, B) if multi else idx
+
+
+def _pad_params(params, padB: int) -> jnp.ndarray:
+    """Grow a (B, 3) param block by neutral [k=0, p=1, m=0] rows."""
+    params = jnp.asarray(params, jnp.float32)
+    if not padB:
+        return params
+    neutral = jnp.broadcast_to(
+        jnp.asarray([0.0, 1.0, 0.0], jnp.float32), (padB, 3)
+    )
+    return jnp.concatenate([params, neutral], axis=0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("W", "tb", "tk", "iters", "interpret")
+)
+def butterfly_sample_truncated_pallas(
+    weights: jnp.ndarray,
+    u: jnp.ndarray,
+    params: jnp.ndarray,
+    W: int = 32,
+    tb: int = 8,
+    tk: int = 512,
+    iters: int = 32,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Truncated draw: (B, K) weights, (B,) uniforms, (B, 3) canonical
+    ``[k, p, min_p]`` params -> (B,) indices from the renormalized
+    truncated distribution.
+
+    Small tiles run the ONE-kernel fused route (threshold search in
+    VMEM); vocab-scale tiles compute per-row thresholds XLA-side
+    (``repro.sampling.transforms``), then run masked pass A + masked
+    pass B — the masked (B, K) matrix never materializes in HBM and no
+    route ever sorts."""
+    B, K = weights.shape
+    params = jnp.asarray(params, jnp.float32)
+    padK = (-K) % W
+    Kp = K + padK
+    tb = _fused_tb(tb, Kp)
+    if tb * Kp * 4 > _FUSED_TILE_BYTES:
+        from repro.sampling import transforms as _tr
+
+        tau = _tr.thresholds_from_params(weights, params, iters=iters)
+        wp, taup, running = _build_masked_sums_impl(
+            weights, tau, W, tb, tk, interpret
+        )
+        return _trunc_draw_from_sums_impl(
+            wp, taup, running, u, B, K, W, tb, interpret
+        )
+    padB = (-B) % tb
+    wp = jnp.pad(weights, ((0, padB), (0, padK)))
+    up = jnp.pad(u.astype(jnp.float32), (0, padB), constant_values=0.5)
+    idx = fused_trunc_draw_pallas(
+        wp, up, _pad_params(params, padB), W, tb, iters, interpret=interpret
+    )
+    return jnp.minimum(idx[:B], K - 1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("W", "tb", "tk", "iters", "interpret")
+)
+def butterfly_sample_truncated_rng_pallas(
+    weights: jnp.ndarray,
+    seed: jnp.ndarray,
+    params: jnp.ndarray,
+    row_offset=0,
+    W: int = 32,
+    tb: int = 8,
+    tk: int = 512,
+    iters: int = 32,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Seed-driven truncated fused draw (the sharded serving fast path):
+    uniforms from (seed, global row) counters — in-kernel on the fused
+    route, XLA-side on the two-pass fallback, bit-identical either way."""
+    B, K = weights.shape
+    params = jnp.asarray(params, jnp.float32)
+    seed2 = _rng.fold(jnp.asarray(seed, jnp.uint32), _rng.TAG_U, 0)
+    padK = (-K) % W
+    Kp = K + padK
+    tb = _fused_tb(tb, Kp)
+    if tb * Kp * 4 > _FUSED_TILE_BYTES:
+        from repro.sampling import transforms as _tr
+
+        tau = _tr.thresholds_from_params(weights, params, iters=iters)
+        wp, taup, running = _build_masked_sums_impl(
+            weights, tau, W, tb, tk, interpret
+        )
+        u = _rng.row_uniforms(seed2, row_offset, B)
+        return _trunc_draw_from_sums_impl(
+            wp, taup, running, u, B, K, W, tb, interpret
+        )
+    padB = (-B) % tb
+    wp = jnp.pad(weights, ((0, padB), (0, padK)))
+    idx = fused_trunc_draw_rng_pallas(
+        wp, seed2, row_offset, _pad_params(params, padB), W, tb, iters,
+        interpret=interpret,
+    )
+    return jnp.minimum(idx[:B], K - 1)
+
+
+# ---------------------------------------------------------------------------
 # Pass B (table-in): tiled walk over prebuilt (wp, running) state
 # ---------------------------------------------------------------------------
 

@@ -35,6 +35,8 @@ from repro.kernels.butterfly_sample.kernel import (
     build_block_sums_pallas,
     butterfly_sample_pallas,
     butterfly_sample_rng_pallas,
+    butterfly_sample_truncated_pallas,
+    butterfly_sample_truncated_rng_pallas,
     sample_from_block_sums_pallas,
     sample_from_block_sums_rng_pallas,
 )
@@ -93,6 +95,47 @@ def butterfly_sample_from_sums_rng(
     (no per-draw keys, launch count independent of S)."""
     return sample_from_block_sums_rng_pallas(
         wp, running, seed, row_offset, S=S, B=B, K=K, W=W, tb=tb,
+        interpret=interpret,
+    )
+
+
+def butterfly_sample_truncated(
+    weights,
+    u,
+    params,
+    W: int = 32,
+    tb: int = 8,
+    tk: int = 512,
+    iters: int = 32,
+    interpret: bool | None = None,
+):
+    """Fused truncated decode draw: (B, K) weights, (B,) uniforms and a
+    (B, 3) canonical ``[top_k, top_p, min_p]`` parameter block -> (B,)
+    indices from the renormalized truncated distribution.  The threshold
+    search (value-axis bisection — no sort, no (B, K) sorted copy) runs
+    inside the fused kernel on the VMEM-resident tile; vocab-scale shapes
+    take the masked two-pass route (DESIGN.md §7)."""
+    return butterfly_sample_truncated_pallas(
+        weights, u, params, W=W, tb=tb, tk=tk, iters=iters, interpret=interpret
+    )
+
+
+def butterfly_sample_truncated_rng(
+    weights,
+    seed,
+    params,
+    row_offset=0,
+    W: int = 32,
+    tb: int = 8,
+    tk: int = 512,
+    iters: int = 32,
+    interpret: bool | None = None,
+):
+    """Seed-driven twin of :func:`butterfly_sample_truncated` — counter
+    RNG instead of a (B,) uniform operand; what the mesh-sharded decode
+    path launches per shard."""
+    return butterfly_sample_truncated_rng_pallas(
+        weights, seed, params, row_offset, W=W, tb=tb, tk=tk, iters=iters,
         interpret=interpret,
     )
 

@@ -49,12 +49,18 @@ from repro.sampling.plan import (
     reset_plans,
 )
 from repro.sampling import sharded
+from repro.sampling import transforms
+from repro.sampling.transforms import MinP, Temperature, TopK, TopP
 
 __all__ = [
     "Categorical",
     "FACTORED_VARIANTS",
     "KEY_VARIANTS",
+    "MinP",
     "SamplerPlan",
+    "Temperature",
+    "TopK",
+    "TopP",
     "U_VARIANTS",
     "VARIANTS",
     "build_count",
@@ -64,4 +70,5 @@ __all__ = [
     "plan_stats",
     "reset_plans",
     "sharded",
+    "transforms",
 ]

@@ -232,6 +232,7 @@ class Categorical:
         method: str = "auto",
         W: Optional[int] = None,
         draws: int = 1,
+        transforms=None,
     ) -> "Categorical":
         """Build from (B, V) logits via a temperature-scaled stable softmax.
 
@@ -239,8 +240,21 @@ class Categorical:
         logits stay ``bfloat16`` through ``exp`` (halving HBM traffic) and
         autotune sees the real dtype; individual builders upcast later
         where accumulation accuracy requires it.
+
+        ``transforms`` is a truncation chain from
+        :mod:`repro.sampling.transforms` (``TopK``/``TopP``/``MinP``,
+        ``Temperature`` folded into the softmax): the truncated tokens'
+        weights are zeroed *before* the table build, so every variant's
+        precomputed state encodes the truncated distribution and every
+        subsequent draw honors it for free (zero weights are never
+        selected).
         """
-        weights = logits_to_weights(logits, temperature)
+        if transforms:
+            from repro.sampling import transforms as _tr
+
+            weights = _tr.apply_to_logits(transforms, logits, temperature)
+        else:
+            weights = logits_to_weights(logits, temperature)
         return cls.from_weights(weights, method=method, W=W, draws=draws)
 
     @classmethod
@@ -414,11 +428,14 @@ def logits_to_weights(logits, temperature: float = 1.0) -> jnp.ndarray:
 
     Stable (max-subtracted) and dtype-preserving: float inputs keep their
     dtype (bfloat16 in, bfloat16 out); non-float inputs upcast to float32.
+    ``temperature`` may be a scalar or a per-row (B,) array (per-request
+    temperature — a traced operand, so one executable serves any mix).
     """
     logits = jnp.asarray(logits)
     if not jnp.issubdtype(logits.dtype, jnp.floating):
         logits = logits.astype(jnp.float32)
-    z = logits / temperature
+    t = jnp.asarray(temperature)
+    z = logits / (t[:, None] if t.ndim == 1 else t)
     z = z - jnp.max(z, axis=-1, keepdims=True)
     return jnp.exp(z)
 

@@ -88,6 +88,14 @@ class SamplerPlan:
     mesh: Optional[object] = None    # jax.sharding.Mesh for sharded plans
     spec: Optional[object] = None    # row PartitionSpec override
     devices: int = 1                 # shards the batch rows split into
+    transforms: str = ""             # truncation-chain signature ("kpm", ...)
+
+    @property
+    def table_method(self) -> str:
+        """The buildable Categorical variant behind this plan's method —
+        ``kernel_trunc`` is the fused truncated *draw* strategy and
+        carries plain ``kernel`` state when a table is built."""
+        return "kernel" if self.method == "kernel_trunc" else self.method
 
     # -- building ----------------------------------------------------------
 
@@ -107,9 +115,18 @@ class SamplerPlan:
             raise ValueError(
                 f"plan was made for shape {self.shape}, got {weights.shape}"
             )
-        return Categorical._build(weights, self.method, self.W, self.tb)
+        return Categorical._build(weights, self.table_method, self.W, self.tb)
 
-    def build_from_logits(self, logits, temperature: float = 1.0) -> Categorical:
+    def build_from_logits(
+        self, logits, temperature: float = 1.0, transforms=None
+    ) -> Categorical:
+        """Build the plan's distribution from logits; a ``transforms``
+        truncation chain is baked into the table (masked weights — see
+        :meth:`Categorical.from_logits`)."""
+        if transforms:
+            from repro.sampling import transforms as _tr
+
+            return self.build(_tr.apply_to_logits(transforms, logits, temperature))
         return self.build(_dist.logits_to_weights(logits, temperature))
 
     def build_from_factors(self, theta, phi, words, doc_ids=None) -> Categorical:
@@ -174,7 +191,7 @@ class SamplerPlan:
         """Build a throwaway distribution and draw — the one-shot path.
 
         Sharded plans fuse build+draw into one shard_map launch."""
-        if self.method in _dist.FACTORED_VARIANTS:
+        if self.table_method in _dist.FACTORED_VARIANTS:
             raise ValueError(
                 f"plan resolved to factored variant {self.method!r}; build "
                 "it with build_from_factors(theta, phi, words) and draw "
@@ -197,14 +214,26 @@ class SamplerPlan:
         key: jax.Array,
         temperature: float = 1.0,
         num_samples: int = 1,
+        transforms=None,
     ) -> jnp.ndarray:
         """Temperature sampling from (B, V) logits (the serving hot path).
 
         ``temperature == 0`` short-circuits to argmax.  A plan resolved to
         ``gumbel`` samples directly in logit space (no exp/log round-trip),
-        matching the legacy ``sample_from_logits`` numerics exactly."""
+        matching the legacy ``sample_from_logits`` numerics exactly.
+
+        ``transforms`` is a truncation chain from
+        :mod:`repro.sampling.transforms` — its parameters (and
+        ``temperature``, scalar or per-row) are traced operands, so one
+        compiled decode step serves per-request, even per-row
+        heterogeneous, top-k/top-p/min-p.  Execution is butterfly-native:
+        a kernel-variant plan runs the fused truncated draw (threshold
+        search in-kernel, no sort, no (B, V) sorted copy); other variants
+        take the XLA threshold twin and build from masked weights."""
         logits = jnp.asarray(logits)
-        if temperature == 0.0:
+        if isinstance(temperature, (int, float)) and temperature == 0.0:
+            # truncation never removes the modal token, so greedy decode
+            # ignores the chain entirely
             greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             if num_samples == 1:
                 return greedy
@@ -214,7 +243,11 @@ class SamplerPlan:
 
             return _sharded.sample_logits_sharded(
                 self, logits, key, temperature=temperature,
-                num_samples=num_samples,
+                num_samples=num_samples, transforms=transforms,
+            )
+        if transforms:
+            return self._sample_logits_truncated(
+                logits, key, temperature, num_samples, transforms
             )
         if self.method == "gumbel":
             from repro.core import gumbel as _gumbel
@@ -227,6 +260,55 @@ class SamplerPlan:
             )(keys)
         weights = _dist.logits_to_weights(logits, temperature)
         return self.sample(weights, key=key, num_samples=num_samples)
+
+    def _sample_logits_truncated(
+        self, logits, key, temperature, num_samples: int, transforms
+    ) -> jnp.ndarray:
+        from repro.sampling import transforms as _tr
+
+        temp = _tr.temperature_of(transforms, temperature)
+        trunc = _tr.truncations_of(transforms)
+        if not trunc:
+            return self.sample_logits(
+                logits, key, temperature=temp, num_samples=num_samples
+            )
+        B = logits.shape[0]
+        kpm = _tr.canonical_params(transforms, B)
+        if (
+            self.method in ("kernel", "kernel_trunc")
+            and num_samples == 1
+            and kpm is not None
+        ):
+            # the decode fast path: softmax straight into the ONE-kernel
+            # fused truncated draw (threshold bisection on the
+            # VMEM-resident tile; masked two-pass route at vocab scale)
+            from repro.kernels.butterfly_sample import ops as _kops
+
+            w = _dist.logits_to_weights(logits, temp)
+            u = jax.random.uniform(key, (B,), dtype=jnp.float32)
+            return _kops.butterfly_sample_truncated(
+                w, u, kpm, W=self.W, tb=self.tb or 8, tk=self.tk or 512
+            )
+        w = _dist.logits_to_weights(logits, temp)
+        if self.method == "gumbel":
+            # stay in logit space: mask the truncated tokens to -inf and
+            # gumbel-argmax the survivors (their relative logits are
+            # untouched, so this IS the renormalized truncated draw)
+            from repro.core import gumbel as _gumbel
+
+            tau = _tr.thresholds(w, trunc)
+            t = jnp.asarray(temp)
+            z = logits / (t[:, None] if t.ndim == 1 else t)
+            zm = jnp.where(
+                w.astype(jnp.float32) >= tau[:, None], z,
+                jnp.asarray(-jnp.inf, z.dtype),
+            )
+            if num_samples == 1:
+                return _gumbel.draw_gumbel_logits(zm, key)
+            keys = jax.random.split(key, num_samples)
+            return jax.vmap(lambda k: _gumbel.draw_gumbel_logits(zm, k))(keys)
+        wm = _tr.apply(w, trunc)
+        return self.sample(wm, key=key, num_samples=num_samples)
 
 
 def _normalize_shape(spec_or_shape, shape) -> Tuple[int, int]:
@@ -256,6 +338,7 @@ def plan(
     mesh=None,
     spec=None,
     devices: Optional[int] = None,
+    transforms="",
 ) -> SamplerPlan:
     """Resolve a sampling strategy for a workload, once.
 
@@ -278,6 +361,13 @@ def plan(
     for another.  ``devices=`` (without a mesh) tags the tuning bucket
     for callers that are *already* per-shard, e.g. inside a shard_map
     body (the shape is then NOT divided further).
+
+    ``transforms=`` declares a truncation workload: a chain (or its
+    :func:`repro.sampling.transforms.signature` string, e.g. ``"kpm"``)
+    joins the memo key and the autotune v4 bucket — truncated decode
+    tunes separately (the fused ``kernel_trunc`` strategy becomes a
+    candidate) but parameter *values* stay out of the key, so per-request
+    p/k share one plan and one executable.
     """
     # unpack a SamplerSpec-shaped object (duck-typed: configs may not be
     # importable in every context this runs)
@@ -292,6 +382,11 @@ def plan(
     method = method or "auto"
     B, K = _normalize_shape(spec_or_shape, shape)
     dtype_name = str(jnp.dtype(dtype)) if not isinstance(dtype, str) else dtype
+    if transforms and not isinstance(transforms, str):
+        from repro.sampling import transforms as _tr
+
+        transforms = _tr.signature(transforms)
+    transforms = transforms or ""
 
     if backend is None:
         backend = jax.default_backend()
@@ -322,7 +417,7 @@ def plan(
         B_res = B                # caller is already per-shard (or unsharded)
     key = (
         B, K, dtype_name, method, W or 0, int(draws), bool(has_key), backend,
-        bool(factored), int(devices), mesh_sig,
+        bool(factored), int(devices), mesh_sig, transforms,
     )
     with _PLAN_LOCK:
         hit = _PLAN_CACHE.get(key)
@@ -340,7 +435,7 @@ def plan(
             _STATS["autotune_resolves"] += 1
         res = autotune.get_tuner().resolve_full(
             B_res, K, draws=draws, dtype_name=dtype_name, has_key=has_key,
-            factored=factored, devices=devices,
+            factored=factored, devices=devices, transforms=transforms,
         )
         resolved = res.method
         resolved_w = W or res.W
@@ -366,6 +461,7 @@ def plan(
         mesh=mesh,
         spec=spec,
         devices=int(devices),
+        transforms=transforms,
     )
     with _PLAN_LOCK:
         _PLAN_CACHE.setdefault(key, p)

@@ -1,0 +1,82 @@
+"""Sorted-reference oracle for truncated decode sampling.
+
+The classic implementation of top-k / top-p / min-p: sort the vocabulary
+descending (materializing the (B, K) sorted copy the butterfly path
+exists to avoid), scan its cumulative sums, mask everything past the
+boundary.  This module IS that implementation, kept deliberately naive —
+it is the correctness oracle ``tests/test_transforms.py`` holds the
+fused/threshold path to (exact mask agreement on continuous weights,
+chi-squared agreement on draws), and the "sort-then-sample" baseline
+``benchmarks/sampler_bench.py --decode`` times the fused path against.
+
+Boundary semantics match :mod:`repro.sampling.transforms`: every stage
+reduces to a value threshold (ties at the boundary value are kept), and
+stages compose sequentially — each truncation sees only the survivors of
+the previous one.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.sampling import transforms as _tr
+
+
+def sorted_mask(weights, transforms: Sequence) -> jnp.ndarray:
+    """(B, K) keep-mask via descending sort + cumsum — the oracle."""
+    _tr.validate(transforms)
+    wf = jnp.asarray(weights).astype(jnp.float32)
+    B, K = wf.shape
+    keep = wf > 0.0
+    for t in _tr.truncations_of(transforms):
+        wm = jnp.where(keep, wf, 0.0)
+        ws = jnp.sort(wm, axis=-1)[:, ::-1]          # the (B, K) sorted copy
+        if isinstance(t, _tr.TopK):
+            k = _tr._row(t.k, B)
+            kth = jnp.take_along_axis(
+                ws,
+                jnp.clip(k.astype(jnp.int32) - 1, 0, K - 1)[:, None],
+                axis=1,
+            )[:, 0]
+            keep &= jnp.where(k[:, None] > 0, wf >= kth[:, None], True)
+        elif isinstance(t, _tr.TopP):
+            p = _tr._row(t.p, B)
+            cum = jnp.cumsum(ws, axis=-1)
+            target = p * cum[:, -1]
+            # boundary = value of the first sorted position whose cumsum
+            # reaches the target (that token is included)
+            j = jnp.argmax(cum >= target[:, None], axis=-1)
+            bound = jnp.take_along_axis(ws, j[:, None], axis=1)[:, 0]
+            keep &= jnp.where(p[:, None] < 1.0, wf >= bound[:, None], True)
+        elif isinstance(t, _tr.MinP):
+            p = _tr._row(t.p, B)
+            keep &= jnp.where(p[:, None] > 0.0, wf >= (p * ws[:, 0])[:, None], True)
+    return keep
+
+
+def truncate_sorted(weights, transforms: Sequence) -> jnp.ndarray:
+    """Masked weights via the sorting oracle."""
+    weights = jnp.asarray(weights)
+    return jnp.where(sorted_mask(weights, transforms), weights,
+                     jnp.zeros_like(weights))
+
+
+def truncated_probs(weights, transforms: Sequence) -> jnp.ndarray:
+    """Renormalized per-row probabilities after oracle truncation — the
+    expected distribution for the chi-squared draw tests."""
+    wm = truncate_sorted(weights, transforms).astype(jnp.float32)
+    return wm / jnp.sum(wm, axis=-1, keepdims=True)
+
+
+@jax.jit
+def draw_truncated_sorted(weights, u, transforms: Sequence) -> jnp.ndarray:
+    """Sort-then-sample: oracle truncation, then the Alg. 1 prefix-sum
+    draw.  The --decode benchmark baseline."""
+    wm = truncate_sorted(weights, transforms).astype(jnp.float32)
+    p = jnp.cumsum(wm, axis=-1)
+    stop = p[:, -1] * u.astype(p.dtype)
+    idx = jax.vmap(lambda row, s: jnp.searchsorted(row, s, side="right"))(p, stop)
+    return jnp.minimum(idx, weights.shape[-1] - 1).astype(jnp.int32)

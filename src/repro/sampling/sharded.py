@@ -245,7 +245,7 @@ def build_sharded(plan, weights) -> Categorical:
         raise ValueError(
             f"plan was made for shape {(B, K)}, got {weights.shape}"
         )
-    method, W, tb = plan.method, plan.W, plan.tb
+    method, W, tb = plan.table_method, plan.W, plan.tb
     ck = ("build", method, W, tb, plan.shape, mesh_signature(mesh, plan.spec))
     fn = _cached_fn(ck, lambda: jax.jit(
         _shard_map(
@@ -319,7 +319,7 @@ def sample_sharded(plan, weights, key, num_samples: int = 1):
     B, K = plan.shape
     weights = _check_shape(plan, weights, "weights")
     Bloc = _shard_B(plan)
-    method, W, tb, tk = plan.method, plan.W, plan.tb, plan.tk
+    method, W, tb, tk = plan.table_method, plan.W, plan.tb, plan.tk
     ck = (
         "sample", method, W, tb, tk, plan.shape, num_samples,
         mesh_signature(mesh, plan.spec),
@@ -352,16 +352,27 @@ def sample_sharded(plan, weights, key, num_samples: int = 1):
 
 
 def sample_logits_sharded(plan, logits, key, temperature: float = 1.0,
-                          num_samples: int = 1):
+                          num_samples: int = 1, transforms=None):
     """Sharded serving hot path: softmax + build + draw fused per shard
     (one shard_map, no (B, V) weight round-trip through HBM resharding).
-    A gumbel plan draws in logit space via counter-Gumbel noise."""
+    A gumbel plan draws in logit space via counter-Gumbel noise.
+
+    ``transforms`` (a canonical top-k/top-p/min-p chain) routes to
+    :func:`sample_logits_truncated_sharded`: parameters broadcast to
+    (B,) and row-shard with the logits, thresholds are computed per shard
+    (row-local reductions — the zero-collectives gate still holds), and a
+    kernel plan launches the fused truncated counter-RNG kernel."""
+    if transforms:
+        return sample_logits_truncated_sharded(
+            plan, logits, key, temperature=temperature,
+            num_samples=num_samples, transforms=transforms,
+        )
     _require_key(key)
     mesh = plan.mesh
     B, K = plan.shape
     logits = _check_shape(plan, logits, "logits")
     Bloc = _shard_B(plan)
-    method, W, tb = plan.method, plan.W, plan.tb
+    method, W, tb = plan.table_method, plan.W, plan.tb
     # temperature is a TRACED operand: per-request temperatures share one
     # compiled executable instead of leaking a cache entry per value
     ck = (
@@ -407,6 +418,79 @@ def sample_logits_sharded(plan, logits, key, temperature: float = 1.0,
     return _cached_fn(ck, make)(
         logits, jnp.asarray(temperature, jnp.float32), key
     )
+
+
+def sample_logits_truncated_sharded(
+    plan, logits, key, temperature=1.0, num_samples: int = 1, transforms=(),
+):
+    """Truncated decode, sharded: temperature + top-k/top-p/min-p per
+    shard with all parameters as traced, row-sharded operands.
+
+    The chain must be canonical (at most one TopK -> TopP -> MinP, in
+    that order, Temperature anywhere); parameters and temperature
+    broadcast to (B,) and shard with the rows, so per-request — even
+    per-row — truncation works across any topology.  Thresholds are
+    row-local reductions and the RNG is the usual (seed, global row)
+    counter, so the draw path keeps ZERO collectives and tokens stay
+    bit-identical for 1, 2, or 8 devices at a fixed key."""
+    from repro.sampling import transforms as _tr
+
+    _require_key(key)
+    mesh = plan.mesh
+    B, K = plan.shape
+    logits = _check_shape(plan, logits, "logits")
+    Bloc = _shard_B(plan)
+    kpm = _tr.canonical_params(transforms, B)
+    if kpm is None:
+        raise ValueError(
+            "sharded truncation needs the canonical TopK -> TopP -> MinP "
+            "chain (repro.sampling.transforms.chain); reorder or pre-mask "
+            "the weights and use plan.sample instead"
+        )
+    temp = _tr._row(_tr.temperature_of(transforms, temperature), B)
+    method, W, tb = plan.table_method, plan.W, plan.tb
+    ck = (
+        "logits_trunc", method, W, tb, plan.tk, plan.shape, num_samples,
+        str(logits.dtype), mesh_signature(mesh, plan.spec),
+    )
+
+    def make():
+        def body(z, t, prm, sd):
+            row0 = _linear_index(mesh, plan.spec) * Bloc
+            w = _dist.logits_to_weights(z, t)
+            if method == "kernel" and num_samples == 1:
+                # fused truncated draw with in-kernel counter RNG: the
+                # threshold bisection, masking, block sums and walk all
+                # happen on the VMEM-resident tile — per shard, no
+                # uniform operand, no collectives
+                from repro.kernels.butterfly_sample import ops as _kops
+
+                return _kops.butterfly_sample_truncated_rng(
+                    w, sd, prm, row_offset=row0, W=W, tb=tb or 8,
+                    tk=plan.tk or 512,
+                )
+            tau = _tr.thresholds_from_params(w, prm)
+            wm = jnp.where(
+                w.astype(jnp.float32) >= tau[:, None], w, jnp.zeros_like(w)
+            )
+            st = _dist._build_state(method, wm, W)
+            d = Categorical(method=method, W=W, shape=(Bloc, K), state=st,
+                            tb=tb)
+            return _local_draw(d, sd, row0, num_samples)
+
+        rs = row_spec(mesh, plan.spec)
+        sm = _shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(rs, rs, rs, P()),
+            out_specs=_out_spec(mesh, num_samples, plan.spec),
+            check_rep=False,  # pallas_call has no replication rule
+        )
+        return jax.jit(
+            lambda x, t, prm, k: sm(x, t, prm, _rng.seed_from_key(k))
+        )
+
+    return _cached_fn(ck, make)(logits, temp, kpm, key)
 
 
 def place_rows(mesh: Mesh, *arrays):

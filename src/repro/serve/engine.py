@@ -43,8 +43,64 @@ class GenerationResult:
     prefill_len: int
 
 
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode sampling controls — a registered pytree whose
+    leaves (``temperature``/``top_k``/``top_p``/``min_p``) are *traced*
+    operands of the decode step: one compiled executable serves any mix
+    of values, including per-row (B,) arrays for heterogeneous batches
+    (request i gets its own top-p).
+
+    ``temperature=None`` (the default) defers to the engine's
+    ``temperature`` argument; a numeric/array value overrides it and must
+    be > 0 (greedy decode is the engine's ``temperature=0``, decided at
+    trace time).  ``top_k=0`` / ``top_p=1.0`` / ``min_p=0.0`` disable the
+    respective truncation — per row, when arrays."""
+
+    temperature: object = None
+    top_k: object = 0
+    top_p: object = 1.0
+    min_p: object = 0.0
+
+    def transforms(self):
+        """The truncation chain (canonical top-k -> top-p -> min-p; the
+        temperature is threaded separately so greedy stays decidable)."""
+        from repro.sampling import transforms as _tr
+
+        return _tr.chain(top_k=self.top_k, top_p=self.top_p, min_p=self.min_p)
+
+
+jax.tree_util.register_pytree_node(
+    SamplingParams,
+    lambda sp: ((sp.temperature, sp.top_k, sp.top_p, sp.min_p), None),
+    lambda aux, ch: SamplingParams(*ch),
+)
+
+def _sp_sig(sp: Optional["SamplingParams"]) -> str:
+    """The transforms signature a SamplingParams default actually runs
+    (statically-disabled stages are dropped by ``transforms.chain``), for
+    the plan memo key and autotune v4 bucket."""
+    if sp is None:
+        return ""
+    from repro.sampling import transforms as _tr
+
+    return _tr.signature(sp.transforms())
+
+
+def default_sampling_params(cfg: ModelConfig) -> Optional[SamplingParams]:
+    """The config's model-card decode defaults lifted into
+    ``SamplingParams`` — ``None`` when the spec doesn't truncate (plain
+    temperature decode keeps the untruncated fast path)."""
+    spec = cfg.sampler_spec
+    if not spec.truncates:
+        return None
+    return SamplingParams(
+        top_k=spec.top_k, top_p=spec.top_p, min_p=spec.min_p
+    )
+
+
 def _logits_plan(cfg: ModelConfig, B: int, V: int, dtype_name: str,
-                 draws: int = 1, mesh=None):
+                 draws: int = 1, mesh=None, transforms: str = ""):
     """The config's sampler spec, planned for a (B, V) logits workload.
 
     ``sampling.plan`` memoizes process-wide, so this resolves autotune on
@@ -53,11 +109,14 @@ def _logits_plan(cfg: ModelConfig, B: int, V: int, dtype_name: str,
     ``draws`` is the per-distribution reuse hint (multi-draw decode).
     ``mesh`` makes the plan sharded: sequences row-shard over the mesh's
     data axes and the sampler runs per shard (the topology is part of the
-    plan memo key, so one engine can serve several meshes)."""
+    plan memo key, so one engine can serve several meshes).
+    ``transforms`` is the truncation-chain signature for truncated decode
+    (joins the autotune v4 bucket; parameter values stay out)."""
     spec = cfg.sampler_spec
     return sampling.plan(
         (B, V), method=spec.method, W=spec.W or None, dtype=dtype_name,
         draws=max(spec.draws, draws), has_key=True, mesh=mesh,
+        transforms=transforms,
     )
 
 
@@ -67,9 +126,10 @@ def make_decode_step(
     batch_size: Optional[int] = None,
     num_samples: int = 1,
     mesh=None,
+    sampling_params: Optional[SamplingParams] = None,
 ):
-    """Jitted decode step: (params, caches, token, pos, key) ->
-    (next_token(s), logits, caches).
+    """Jitted decode step: (params, caches, token, pos, key[, sampling])
+    -> (next_token(s), logits, caches).
 
     When ``batch_size`` is known up front the sampler plan is built (and
     autotune resolved) eagerly, before the first trace; otherwise planning
@@ -87,27 +147,67 @@ def make_decode_step(
     a shard_map of the same tiled kernels with counter RNG — zero
     collectives on the draw path, tokens bit-identical for any device
     count at a fixed key (DESIGN.md §5).  Requires ``batch_size`` (or the
-    first traced batch) divisible by the data-shard count."""
+    first traced batch) divisible by the data-shard count.
+
+    ``sampling_params`` turns on truncated decode: the returned step
+    takes an optional trailing ``sampling`` argument (default: the value
+    given here) whose top-k/top-p/min-p/temperature leaves are *traced* —
+    per-request, even per-row heterogeneous, parameters reuse one
+    compiled step.  When omitted, the model config's
+    ``SamplerSpec.top_k/top_p/min_p`` defaults apply (``None`` for
+    configs that don't truncate — those keep the exact legacy step).
+    Execution is butterfly-native (fused threshold pass, no vocab sort —
+    see ``repro.sampling.transforms``)."""
     cfg = model.cfg
+    sp0 = sampling_params if sampling_params is not None else (
+        default_sampling_params(cfg)
+    )
+    if sp0 is None:
+        if batch_size is not None:
+            _logits_plan(cfg, batch_size, cfg.padded_vocab, "float32",
+                         draws=num_samples, mesh=mesh)
+
+        @jax.jit
+        def step(params, caches, token, pos, key):
+            logits, caches = model.decode(params, caches, token, pos)
+            p = _logits_plan(
+                cfg, logits.shape[0], logits.shape[1], str(logits.dtype),
+                draws=num_samples, mesh=mesh,
+            )
+            nxt = p.sample_logits(
+                logits, key, temperature=temperature, num_samples=num_samples
+            )
+            if num_samples == 1:
+                return nxt[:, None].astype(jnp.int32), logits, caches
+            return nxt.T.astype(jnp.int32), logits, caches  # (B, num_samples)
+
+        return step
+
+    sig = _sp_sig(sp0)
     if batch_size is not None:
         _logits_plan(cfg, batch_size, cfg.padded_vocab, "float32",
-                     draws=num_samples, mesh=mesh)
+                     draws=num_samples, mesh=mesh, transforms=sig)
 
     @jax.jit
-    def step(params, caches, token, pos, key):
+    def trunc_step(params, caches, token, pos, key, sampling=sp0):
         logits, caches = model.decode(params, caches, token, pos)
         p = _logits_plan(
             cfg, logits.shape[0], logits.shape[1], str(logits.dtype),
-            draws=num_samples, mesh=mesh,
+            draws=num_samples, mesh=mesh, transforms=sig,
+        )
+        temp = (
+            sampling.temperature if sampling.temperature is not None
+            else temperature
         )
         nxt = p.sample_logits(
-            logits, key, temperature=temperature, num_samples=num_samples
+            logits, key, temperature=temp, num_samples=num_samples,
+            transforms=sampling.transforms(),
         )
         if num_samples == 1:
             return nxt[:, None].astype(jnp.int32), logits, caches
-        return nxt.T.astype(jnp.int32), logits, caches   # (B, num_samples)
+        return nxt.T.astype(jnp.int32), logits, caches
 
-    return step
+    return trunc_step
 
 
 def _pad_caches_to(caches, target_len: int):
@@ -148,11 +248,14 @@ def generate(
 
     step_fn = make_decode_step(model, temperature, batch_size=B)
     k0, key = jax.random.split(key)
+    sp0 = default_sampling_params(cfg)  # model-card truncation, if any
     first_plan = _logits_plan(
-        cfg, last_logits.shape[0], last_logits.shape[1], str(last_logits.dtype)
+        cfg, last_logits.shape[0], last_logits.shape[1],
+        str(last_logits.dtype), transforms=_sp_sig(sp0),
     )
     first = first_plan.sample_logits(
-        last_logits, k0, temperature=temperature
+        last_logits, k0, temperature=temperature,
+        transforms=sp0.transforms() if sp0 else None,
     )[:, None].astype(jnp.int32)
 
     out = [np.asarray(first)]
@@ -176,20 +279,35 @@ def generate(
 
 def make_serve_step(
     model: Model, temperature: float = 1.0, batch_size: Optional[int] = None,
-    mesh=None,
+    mesh=None, sampling_params: Optional[SamplingParams] = None,
 ):
     """The dry-run target: one fused decode+sample step as a pure function
     (params, caches, token, pos, key) -> (next_token, caches).
-    ``mesh`` shards the sampler like :func:`make_decode_step`."""
+    ``mesh`` shards the sampler like :func:`make_decode_step`;
+    ``sampling_params`` (explicit only — the dry-run contract keeps the
+    5-argument signature, so config defaults are not auto-applied here)
+    bakes a truncation chain into the step."""
     cfg = model.cfg
+    sig = _sp_sig(sampling_params)
     if batch_size is not None:
-        _logits_plan(cfg, batch_size, cfg.padded_vocab, "float32", mesh=mesh)
+        _logits_plan(cfg, batch_size, cfg.padded_vocab, "float32", mesh=mesh,
+                     transforms=sig)
 
     def serve_step(params, caches, token, pos, key):
         logits, caches = model.decode(params, caches, token, pos)
         p = _logits_plan(cfg, logits.shape[0], logits.shape[1],
-                         str(logits.dtype), mesh=mesh)
-        nxt = p.sample_logits(logits, key, temperature=temperature)
+                         str(logits.dtype), mesh=mesh, transforms=sig)
+        if sampling_params is None:
+            nxt = p.sample_logits(logits, key, temperature=temperature)
+        else:
+            temp = (
+                sampling_params.temperature
+                if sampling_params.temperature is not None else temperature
+            )
+            nxt = p.sample_logits(
+                logits, key, temperature=temp,
+                transforms=sampling_params.transforms(),
+            )
         return nxt.astype(jnp.int32), caches
 
     return serve_step
