@@ -15,7 +15,6 @@ actually assigns it — the same code path the dry-run uses.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
 import numpy as np
@@ -24,29 +23,12 @@ from repro.configs import get_config
 from repro.configs.base import SHAPES_BY_NAME
 from repro.dist import sharding as shd
 from repro.models import build_model
-from repro.models.params import is_spec
-import jax
 
 
-class MeshDesc:
-    def __init__(self, shape: Dict[str, int]):
-        self.axis_names = tuple(shape)
-        self.shape = dict(shape)
-
-
-def _per_device_bytes(spec_tree, mesh, itemsize: float, rules=None) -> float:
-    total = 0.0
-    for sp in jax.tree.leaves(spec_tree, is_leaf=is_spec):
-        p = shd.spec_for_shape(sp.shape, sp.axes, mesh, rules)
-        div = 1
-        for asg in tuple(p):
-            if asg is None:
-                continue
-            names = (asg,) if isinstance(asg, str) else asg
-            for a in names:
-                div *= mesh.shape[a]
-        total += float(np.prod(sp.shape)) * itemsize / div
-    return total
+# the shared mesh-description type and per-device accounting now live in
+# the rules engine itself, so mesh fitting and this model use one code path
+MeshDesc = shd.MeshDesc
+_per_device_bytes = shd.tree_bytes_per_device
 
 
 def analytic_memory_gb(arch: str, shape_name: str, multi_pod: bool = False,

@@ -1,0 +1,28 @@
+"""Distributed substrate: sharding rules, elastic fault tolerance,
+checkpoint/gradient compression, and multi-host monitoring.
+
+The four modules are deliberately independent (no cross-imports except
+``fault`` -> ``compression`` for quantized checkpoints) so each surface
+can be tested on a single CPU host with virtual devices:
+
+- :mod:`repro.dist.sharding` — the logical-axis rules engine that turns
+  ``ParamSpec.axes`` names (``vocab``, ``embed``, ``heads``, ...) into
+  mesh ``PartitionSpec``s with divisibility-aware fallback to
+  replication.  Used by the dry-run, the memory model, the launchers and
+  (through :func:`repro.dist.sharding.constrain_activation`) the model
+  forward passes themselves.
+- :mod:`repro.dist.fault` — atomic multi-host-safe checkpoints that
+  reshard on restore (elastic mesh_a -> mesh_b resume), async saves, and
+  the SIGTERM preemption hook.
+- :mod:`repro.dist.compression` — int8 per-tensor quantization for
+  checkpoint/optimizer-state compression and the error-feedback
+  compressed-allreduce simulation.
+- :mod:`repro.dist.monitor` — per-step timing aggregation across hosts:
+  tokens/sec, straggler flagging, heartbeat-based dead-host detection.
+
+See DESIGN.md §8 "Distributed substrate".
+"""
+
+from repro.dist import compression, fault, monitor, sharding
+
+__all__ = ["sharding", "fault", "compression", "monitor"]

@@ -1,0 +1,70 @@
+"""Int8 compression: per-tensor quantization for checkpoints/optimizer
+state, and the error-feedback compressed-allreduce simulation.
+
+``quantize_int8`` is the per-tensor (single absmax scale) spelling used
+for checkpoint compression — contrast the *blockwise* quantizer inside
+``repro.train.optimizer`` that the 8-bit AdamW uses in the update loop.
+Round-to-nearest against an absmax/127 scale bounds the elementwise
+reconstruction error at ``scale / 2``.
+
+``simulate_compressed_allreduce`` models the classic error-feedback
+scheme (1-bit Adam / EF-SGD lineage): each worker quantizes
+``grad + residual``, ships int8, and keeps the quantization error as the
+next round's residual — so the *accumulated* mean is unbiased even
+though every single round is lossy.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor int8 quantization: returns ``(q, scale)`` with
+    ``q = round(x / scale)`` in [-127, 127] and ``scale = absmax / 127``
+    (a float32 scalar; ``float(scale)`` is well-defined)."""
+    x = jnp.asarray(x)
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize_int8` (error <= scale / 2 elementwise)."""
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(grads):
+    """Zero residual tree matching ``grads`` — one per worker."""
+    return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+
+def simulate_compressed_allreduce(
+    grads: Sequence, residuals: Sequence
+) -> Tuple[object, List]:
+    """One round of int8 compressed allreduce with error feedback.
+
+    ``grads``/``residuals`` are per-worker trees (or bare arrays).  Each
+    worker compresses ``g + residual``; the reduction averages the
+    *dequantized* payloads; the quantization error stays local as the new
+    residual.  Returns ``(mean_estimate, new_residuals)``.
+    """
+    n = len(grads)
+    payloads = []
+    new_residuals = []
+    for g, r in zip(grads, residuals):
+        def one(gl, rl):
+            c = gl.astype(jnp.float32) + rl
+            q, s = quantize_int8(c)
+            d = dequantize_int8(q, s)
+            return d, c - d
+
+        pairs = jax.tree.map(one, g, r)
+        payloads.append(jax.tree.map(lambda pr: pr[0], pairs, is_leaf=lambda x: isinstance(x, tuple)))
+        new_residuals.append(jax.tree.map(lambda pr: pr[1], pairs, is_leaf=lambda x: isinstance(x, tuple)))
+    mean = jax.tree.map(lambda *xs: sum(xs) / n, *payloads)
+    return mean, new_residuals

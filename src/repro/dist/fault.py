@@ -1,0 +1,303 @@
+"""Elastic fault tolerance: atomic checkpoints that reshard on restore,
+async saves, and the preemption hook.
+
+Checkpoint layout on disk (DESIGN.md §8)::
+
+    <dir>/
+      step_00000042/
+        manifest.json     # schema, leaf table (shape/dtype/offset/enc),
+                          # user 'extra' payload, step number
+        data.bin          # leaf payloads, concatenated raw little-endian
+                          # bytes (int8 q + fp32 scale pairs when enc=int8)
+
+A checkpoint is *committed* by the atomic ``os.replace`` of a finished
+temp directory onto ``step_N`` — readers never observe a partial
+checkpoint, and a preempted writer leaves only a ``.tmp-*`` directory
+that the next save garbage-collects.  Multi-host: every process computes
+the same bytes from its addressable shards' global view, but only
+process 0 writes (single-controller CPU runs are process 0 by
+definition).
+
+Restore is *elastic*: values are stored mesh-free (the fully gathered
+global array), so ``restore(like=tree, shardings=new_tree)`` places the
+same values onto ANY mesh whose shardings you hand it — a checkpoint
+saved on a (4, 2) mesh resumes on (2, 4), (1, 1) or (8, 1) bit-exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import signal
+import threading
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.compression import dequantize_int8, quantize_int8
+
+_MANIFEST = "manifest.json"
+_DATA = "data.bin"
+_SCHEMA = 1
+
+# dtypes stored as int8 (+ fp32 scale) when the manager compresses
+_COMPRESSIBLE = ("float32", "float64")
+
+
+@dataclasses.dataclass
+class _LeafMeta:
+    shape: Tuple[int, ...]
+    dtype: str
+    offset: int
+    nbytes: int
+    enc: str = "raw"            # raw | int8
+    scale: float = 0.0          # int8 per-tensor scale
+
+
+def _host_value(x) -> np.ndarray:
+    """Fully-gathered host copy of a (possibly sharded) array."""
+    if isinstance(x, jax.Array) and not x.is_fully_addressable:
+        # multi-host: gather the global value through the addressable
+        # shards (each process holds the same global view after this)
+        from jax.experimental import multihost_utils
+
+        x = multihost_utils.process_allgather(x, tiled=True)
+    return np.asarray(jax.device_get(x))
+
+
+class CheckpointManager:
+    """Atomic, GC'd, optionally-async checkpoints under one directory.
+
+    Parameters
+    ----------
+    dir: checkpoint root (created on first save).
+    keep: how many committed steps to retain (older ones are deleted
+        after each successful save); ``None``/0 keeps everything.
+    async_save: hand the (already host-snapshotted) write to a background
+        thread.  ``save(..., block=True)`` or :meth:`wait` joins it.
+    compress: store float leaves as int8 + per-tensor scale
+        (:mod:`repro.dist.compression`) — lossy by <= scale/2 per
+        element; intended for optimizer moments, not params.
+    """
+
+    def __init__(
+        self,
+        dir: str,
+        keep: Optional[int] = None,
+        async_save: bool = True,
+        compress: bool = False,
+    ):
+        self.dir = dir
+        self.keep = keep
+        self.async_save = async_save
+        self.compress = compress
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- paths -------------------------------------------------------------
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def steps(self) -> List[int]:
+        if not os.path.isdir(self.dir):
+            return []
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                try:
+                    out.append(int(name[len("step_"):]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    # -- save --------------------------------------------------------------
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None,
+             block: bool = False) -> None:
+        """Snapshot ``tree`` on the host NOW, then write (async by default).
+
+        The snapshot happens synchronously so donated/overwritten device
+        buffers can't race the writer thread; only serialization and I/O
+        move off-thread.
+        """
+        self.wait()  # serialize saves; surface a previous writer's error
+        leaves, treedef = jax.tree.flatten(tree)
+        host_leaves = [_host_value(x) for x in leaves]
+        payload = {
+            "step": int(step),
+            "treedef": str(treedef),
+            "extra": extra if extra is not None else {},
+        }
+
+        if self.async_save and not block:
+            self._thread = threading.Thread(
+                target=self._write_guarded, args=(step, host_leaves, payload),
+                daemon=True,
+            )
+            self._thread.start()
+        else:
+            self._write(step, host_leaves, payload)
+
+    def _write_guarded(self, step, host_leaves, payload):
+        try:
+            self._write(step, host_leaves, payload)
+        except BaseException as e:  # re-raised from wait()
+            self._error = e
+
+    def _write(self, step: int, host_leaves: List[np.ndarray], payload: Dict):
+        if jax.process_index() != 0:
+            return
+        os.makedirs(self.dir, exist_ok=True)
+        # clear stale temp dirs from preempted writers
+        for name in os.listdir(self.dir):
+            if name.startswith(".tmp-"):
+                shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
+        tmp = os.path.join(self.dir, f".tmp-{step}-{os.getpid()}")
+        os.makedirs(tmp, exist_ok=True)
+        metas: List[Dict] = []
+        offset = 0
+        with open(os.path.join(tmp, _DATA), "wb") as f:
+            for arr in host_leaves:
+                enc, scale = "raw", 0.0
+                buf = arr
+                if self.compress and str(arr.dtype) in _COMPRESSIBLE and arr.size:
+                    q, s = quantize_int8(jnp.asarray(arr))
+                    buf = np.asarray(q)
+                    enc, scale = "int8", float(s)
+                data = buf.tobytes()
+                metas.append(dataclasses.asdict(_LeafMeta(
+                    shape=tuple(int(d) for d in arr.shape),
+                    dtype=str(arr.dtype), offset=offset, nbytes=len(data),
+                    enc=enc, scale=scale,
+                )))
+                f.write(data)
+                offset += len(data)
+        manifest = {"schema": _SCHEMA, "leaves": metas, **payload}
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f)
+        final = self._step_dir(step)
+        if os.path.isdir(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # the commit point
+        self._gc()
+
+    def _gc(self):
+        if not self.keep:
+            return
+        steps = self.steps()
+        for s in steps[: max(len(steps) - self.keep, 0)]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def wait(self) -> None:
+        """Join an in-flight async save; re-raise its error, if any."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- restore -----------------------------------------------------------
+
+    def restore(self, like, shardings=None, step: Optional[int] = None):
+        """Read a checkpoint back as ``(tree, extra)``.
+
+        ``like`` supplies the tree structure (its values are ignored).
+        ``shardings`` — a matching tree of ``NamedSharding``s — reshards
+        every leaf onto its new placement via ``jax.device_put``; this is
+        the elastic path (the saved mesh is irrelevant).  Without it,
+        leaves come back as committed host->default-device arrays.
+        """
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.dir!r}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, _MANIFEST)) as f:
+            manifest = json.load(f)
+        leaves_meta = manifest["leaves"]
+        _, treedef = jax.tree.flatten(like)
+        if treedef.num_leaves != len(leaves_meta):
+            raise ValueError(
+                f"checkpoint step {step} holds {len(leaves_meta)} leaves but "
+                f"'like' has {treedef.num_leaves} — structure drift?"
+            )
+        sh_leaves = (
+            treedef.flatten_up_to(shardings) if shardings is not None
+            else [None] * len(leaves_meta)
+        )
+        with open(os.path.join(d, _DATA), "rb") as f:
+            blob = f.read()
+        out = []
+        for meta, sh in zip(leaves_meta, sh_leaves):
+            raw = blob[meta["offset"]: meta["offset"] + meta["nbytes"]]
+            shape = tuple(meta["shape"])
+            if meta.get("enc") == "int8":
+                q = np.frombuffer(raw, dtype=np.int8).reshape(shape)
+                arr = np.asarray(
+                    dequantize_int8(jnp.asarray(q), jnp.float32(meta["scale"]))
+                ).astype(jnp.dtype(meta["dtype"]))
+            else:
+                arr = np.frombuffer(raw, dtype=jnp.dtype(meta["dtype"]))
+                arr = arr.reshape(shape)
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jnp.asarray(arr))
+        tree = jax.tree.unflatten(treedef, out)
+        return tree, manifest.get("extra", {})
+
+
+# ---------------------------------------------------------------------------
+# preemption
+# ---------------------------------------------------------------------------
+
+# SIGTERM flips this event; the train loop polls ``preempted()`` each step
+# and commits a final checkpoint before exiting (launch/train.py).
+_PREEMPTED = threading.Event()
+
+
+def install_preemption_handler(signals: Tuple[int, ...] = (signal.SIGTERM,)) -> None:
+    """Route cluster preemption signals into the ``preempted()`` flag.
+
+    Chainable: a previously installed handler for the same signal still
+    runs.  Safe to call more than once (the flag is idempotent)."""
+
+    for sig in signals:
+        prev = signal.getsignal(sig)
+
+        def handler(signum, frame, _prev=prev):
+            _PREEMPTED.set()
+            if callable(_prev) and _prev not in (signal.SIG_IGN, signal.SIG_DFL):
+                _prev(signum, frame)
+
+        try:
+            signal.signal(sig, handler)
+        except ValueError:
+            # not the main thread (e.g. under a test runner worker):
+            # preemption then only arrives via _signal_preemption()
+            pass
+
+
+def preempted() -> bool:
+    """Has a preemption signal arrived?  (Sticky until :func:`reset`.)"""
+    return _PREEMPTED.is_set()
+
+
+def _signal_preemption() -> None:
+    """Test hook: mark the process preempted without a real SIGTERM."""
+    _PREEMPTED.set()
+
+
+def reset_preemption() -> None:
+    _PREEMPTED.clear()

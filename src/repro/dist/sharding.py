@@ -1,0 +1,303 @@
+"""Rule-based sharding engine: logical axis names -> mesh axes.
+
+Every parameter/cache/activation tensor in the repo carries *logical*
+axis names (``ParamSpec.axes``: ``vocab``, ``embed``, ``heads``,
+``batch``, ``kv_seq``, ...).  This module owns the single mapping from
+those names to physical mesh axes, so the dry-run, the analytic memory
+model, the launchers and the model code itself all agree on placement.
+
+The engine is deliberately simple and total:
+
+- ``DEFAULT_RULES`` is an ordered list of ``(logical_name, candidates)``
+  pairs.  Each candidate is a *group* of mesh-axis names (``("pod",
+  "data")`` acts as one fused axis — FSDP over every data-parallel
+  degree).  Order is priority: earlier rules claim mesh axes first
+  (``batch`` beats ``kv_seq`` for the data axes; ``kv_seq`` then
+  greedily claims whatever is left).
+- Resolution is divisibility-aware: a logical dim takes a candidate
+  group only when its size divides evenly by the group's total mesh
+  extent; otherwise the next candidate is tried, and replication is the
+  fallback (odd vocabs replicate, their ``embed`` partner still shards).
+- No mesh axis is ever assigned twice within one ``PartitionSpec``.
+
+Rules resolve against a mesh *description* — anything with
+``axis_names`` and a ``shape`` mapping — so unit tests and the analytic
+memory model never need to build device meshes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+# Axis groups.  DATA is every data-parallel degree fused (pod x data on a
+# multi-pod mesh, just data on a single pod); MODEL is the tensor-parallel
+# axis.  A group resolves against a concrete mesh by dropping the axis
+# names that mesh doesn't have.
+DATA = ("pod", "data")
+MODEL = ("model",)
+
+Rule = Tuple[str, Tuple[Tuple[str, ...], ...]]
+
+# Priority-ordered.  The order is load-bearing and pinned by tests:
+# ``batch`` must beat ``kv_seq`` to the data axes (decode_32k shards rows;
+# kv_seq falls back to the model axis), and ``embed`` must claim data
+# before ``kv_seq`` considers it (FSDP survives odd head counts).
+DEFAULT_RULES: List[Rule] = [
+    ("batch",    (DATA,)),           # rows over every data degree
+    ("vocab",    (MODEL,)),          # Megatron-style vocab parallelism
+    ("embed",    (DATA,)),           # FSDP: d_model over data axes
+    ("experts",  (MODEL,)),          # expert parallelism
+    ("heads",    (MODEL,)),          # tensor parallelism over q heads
+    ("kv_heads", (MODEL,)),
+    ("mlp",      (MODEL,)),          # d_ff, when heads/experts didn't claim it
+    ("q_lora",   (MODEL,)),          # MLA latent ranks
+    ("kv_lora",  (MODEL,)),
+    ("kv_seq",   (DATA, MODEL)),     # cache length: leftovers, greedily
+    ("seq",      (MODEL,)),          # input token axis (train/prefill)
+    ("act_seq",  (MODEL,)),          # saved-activation sequence sharding
+    ("act_kv",   (MODEL,)),          # flash-decoding score/cache seq axis
+    ("qblocks",  (DATA,)),           # 8-bit optimizer moment blocks (ZeRO)
+]
+
+
+class MeshDesc:
+    """A mesh *description* — just ``axis_names`` + a ``shape`` mapping —
+    that the rules engine (and the analytic memory model / mesh fitting)
+    resolve against without ever touching devices."""
+
+    def __init__(self, shape: Dict[str, int]):
+        self.axis_names = tuple(shape)
+        self.shape = dict(shape)
+
+    def __repr__(self):
+        return f"MeshDesc({self.shape})"
+
+
+def _mesh_extent(mesh, group: Tuple[str, ...]) -> Tuple[Tuple[str, ...], int]:
+    """Resolve a candidate group against a mesh description: keep only the
+    axes the mesh has, return (resolved_axes, product_of_sizes)."""
+    axes = tuple(a for a in group if a in tuple(mesh.axis_names))
+    n = 1
+    for a in axes:
+        n *= int(mesh.shape[a])
+    return axes, n
+
+
+def _normalize(entry: Optional[Tuple[str, ...]]):
+    """PartitionSpec entries: () -> None, 1-tuple -> str, else tuple."""
+    if not entry:
+        return None
+    if len(entry) == 1:
+        return entry[0]
+    return tuple(entry)
+
+
+def spec_for_shape(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    mesh,
+    rules: Optional[List[Rule]] = None,
+) -> PartitionSpec:
+    """Map one tensor's logical axes to a ``PartitionSpec`` on ``mesh``.
+
+    Rules are processed in priority order; for a rule's logical name that
+    appears in ``axes``, each candidate group is tried in turn — it must
+    resolve to unused mesh axes and divide the dim size evenly — and the
+    first hit is assigned.  Unmatched or indivisible dims replicate.
+
+    ``rules`` may prepend overrides (duplicate names: first wins), as the
+    dry-run's ``extra_rules + DEFAULT_RULES`` spelling does.
+    """
+    if len(shape) != len(axes):
+        raise ValueError(f"shape {tuple(shape)} vs axes {tuple(axes)}")
+    rules = DEFAULT_RULES if rules is None else rules
+    assignment: List[Optional[Tuple[str, ...]]] = [None] * len(shape)
+    used: set = set()
+    seen_names: set = set()
+    for name, candidates in rules:
+        if name in seen_names or name not in axes:
+            continue
+        seen_names.add(name)
+        dim = axes.index(name)
+        size = int(shape[dim])
+        for group in candidates:
+            resolved, extent = _mesh_extent(mesh, group)
+            if not resolved or extent <= 1:
+                continue
+            if any(a in used for a in resolved):
+                continue
+            if size % extent != 0:
+                continue
+            assignment[dim] = resolved
+            used.update(resolved)
+            break
+    return PartitionSpec(*(_normalize(e) for e in assignment))
+
+
+def override_rules(overrides: Dict[str, object], rules: Optional[List[Rule]] = None) -> List[Rule]:
+    """A copy of ``rules`` with named entries replaced.
+
+    ``override_rules({"embed": None})`` forces replication of ``embed``
+    (the dry-run's ``--no-fsdp`` lever); a string or tuple value becomes
+    that rule's single candidate group.
+    """
+    rules = list(DEFAULT_RULES if rules is None else rules)
+    out: List[Rule] = []
+    for name, candidates in rules:
+        if name in overrides:
+            val = overrides[name]
+            if val is None:
+                candidates = ()
+            elif isinstance(val, str):
+                candidates = ((val,),)
+            else:
+                candidates = (tuple(val),)
+        out.append((name, candidates))
+    for name, val in overrides.items():
+        if name not in {n for n, _ in out}:
+            if val is None:
+                out.insert(0, (name, ()))
+            elif isinstance(val, str):
+                out.insert(0, (name, ((val,),)))
+            else:
+                out.insert(0, (name, (tuple(val),)))
+    return out
+
+
+def named_sharding(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    mesh,
+    rules: Optional[List[Rule]] = None,
+) -> NamedSharding:
+    """``NamedSharding`` for one tensor (``mesh`` must be a real mesh)."""
+    return NamedSharding(mesh, spec_for_shape(shape, axes, mesh, rules))
+
+
+def _is_axes_leaf(x) -> bool:
+    """Axes trees have tuple-of-names leaves; tuples are pytrees, so tree
+    operations over axes need an explicit leaf predicate."""
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+
+def tree_shardings(tree, axes_tree, mesh, rules: Optional[List[Rule]] = None):
+    """Mirror ``tree`` (arrays or ShapeDtypeStructs) with NamedShardings.
+
+    ``axes_tree`` matches ``tree``'s structure with logical-axes tuples at
+    the leaf positions (``repro.models.logical_axes`` output, or the
+    optimizer trees from :func:`optimizer_state_axes`).
+    """
+    leaves, tdef = jax.tree.flatten(tree)
+    ax_leaves = tdef.flatten_up_to(axes_tree)
+    shardings = [
+        named_sharding(leaf.shape, ax, mesh, rules)
+        for leaf, ax in zip(leaves, ax_leaves)
+    ]
+    return jax.tree.unflatten(tdef, shardings)
+
+
+# ---------------------------------------------------------------------------
+# optimizer state axes
+# ---------------------------------------------------------------------------
+
+
+def optimizer_state_axes(name: str, param_axes):
+    """Logical axes for an optimizer's state tree, leaf-for-leaf.
+
+    ``param_axes`` is a tree with per-param logical-axes tuples at the
+    leaves (``logical_axes(specs)``); the result mirrors the structure
+    ``Optimizer.state_specs``/``Optimizer.init`` produce:
+
+    - ``adamw``: fp32 moments shaped like the param -> same axes.
+    - ``adamw8bit``: blockwise-quantized moments live in ``(nblocks,
+      QBLOCK)`` layouts regardless of the param shape -> ``("qblocks",
+      None)`` for payloads and scales alike (blocks shard over the data
+      axes, ZeRO-style).
+    - ``adafactor``: factored second moment -> row factor keeps
+      ``axes[:-1]``, column factor keeps ``axes[:-2] + axes[-1:]``;
+      vectors keep their own axes.
+    """
+    def leaf(axes: Tuple[Optional[str], ...]):
+        if name == "adamw":
+            return {"m": axes, "v": axes}
+        if name == "adamw8bit":
+            qaxes = ("qblocks", None)
+            return {"m_q": qaxes, "m_s": qaxes, "v_q": qaxes, "v_s": qaxes}
+        if name == "adafactor":
+            if len(axes) >= 2:
+                return {"vr": axes[:-1], "vc": axes[:-2] + axes[-1:]}
+            return {"v": axes}
+        raise ValueError(f"unknown optimizer {name!r}")
+
+    return jax.tree.map(leaf, param_axes, is_leaf=_is_axes_leaf)
+
+
+# ---------------------------------------------------------------------------
+# activation sharding (runtime lever used inside model forward passes)
+# ---------------------------------------------------------------------------
+
+# Process-wide activation-sharding context.  ``mesh`` None (the default)
+# makes constrain_activation the identity — single-host tests and code
+# paths outside a mesh pay nothing.
+_ACT_CTX: Dict[str, object] = {"mesh": None, "rules": None}
+
+
+def set_activation_sharding(mesh, rules: Optional[List[Rule]] = None) -> None:
+    """Arm (or with ``None`` disarm) activation-sharding constraints for
+    subsequent traces.  The dry-run's ``--act-seq-shard`` lever; real
+    launchers set it right before building their jitted steps."""
+    _ACT_CTX["mesh"] = mesh
+    _ACT_CTX["rules"] = rules
+
+
+def constrain_activation(x, axes: Sequence[Optional[str]]):
+    """``with_sharding_constraint`` through the rules engine — a no-op
+    (returns ``x`` itself) when no activation mesh is set."""
+    mesh = _ACT_CTX.get("mesh")
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, named_sharding(x.shape, axes, mesh, _ACT_CTX.get("rules"))
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-device byte accounting (shared by the memory model and mesh fitting)
+# ---------------------------------------------------------------------------
+
+
+def shard_fraction(shape, axes, mesh, rules: Optional[List[Rule]] = None) -> int:
+    """The total mesh extent this tensor divides over (1 = replicated)."""
+    p = spec_for_shape(shape, axes, mesh, rules)
+    div = 1
+    for entry in tuple(p):
+        if entry is None:
+            continue
+        names = (entry,) if isinstance(entry, str) else entry
+        for a in names:
+            div *= int(mesh.shape[a])
+    return div
+
+
+def tree_bytes_per_device(
+    spec_tree, mesh, itemsize: float = 2.0, rules: Optional[List[Rule]] = None
+) -> float:
+    """Per-device resident bytes of a ParamSpec tree under the rules.
+
+    The same code path the analytic memory model and
+    ``smallest_fitting_mesh(specs=...)`` use, so the dry-run's estimate
+    and the real placement agree by construction.  ``mesh`` may be a
+    description (axis_names + shape mapping) — no devices needed.
+    """
+    import numpy as np
+
+    from repro.models.params import is_spec
+
+    total = 0.0
+    for sp in jax.tree.leaves(spec_tree, is_leaf=is_spec):
+        div = shard_fraction(sp.shape, sp.axes, mesh, rules)
+        total += float(np.prod(sp.shape)) * itemsize / div
+    return total

@@ -30,7 +30,9 @@ def make_host_mesh(model: int = 1):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
-def smallest_fitting_mesh(data: int = 1, model: int = 1):
+def smallest_fitting_mesh(data: int = 1, model: int = 1, *, specs=None,
+                          budget_bytes: float = None, itemsize: float = 2.0,
+                          rules=None):
     """A (data, model) mesh on the *first* data*model local devices.
 
     Unlike :func:`make_host_mesh` this never requires the requested shape
@@ -38,10 +40,41 @@ def smallest_fitting_mesh(data: int = 1, model: int = 1):
     they mean (e.g. a (2, 1) mesh on an 8-device host) and get the
     smallest mesh that fits it.  Raises ``ValueError`` when the host has
     too few devices.
+
+    With ``specs`` (a ParamSpec tree) and ``budget_bytes``, the explicit
+    shape is ignored and the function *searches*: candidate (data, model)
+    shapes are costed through the SAME rules engine the launchers shard
+    with (``repro.dist.sharding.tree_bytes_per_device``), and the fewest
+    devices whose per-device bytes fit the budget win.  This is what
+    keeps the dry-run's memory estimate and the real placement in
+    agreement by construction — one code path, not two formulas.  Ties
+    (same device count) prefer smaller ``model`` (tensor parallelism pays
+    collectives every layer; FSDP doesn't).
     """
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if specs is not None:
+        if budget_bytes is None:
+            raise ValueError("specs= requires budget_bytes=")
+        from repro.dist import sharding as shd
+
+        candidates = sorted(
+            ((d * m, m, d) for d in range(1, len(devs) + 1)
+             for m in range(1, len(devs) + 1) if d * m <= len(devs)),
+        )
+        for total, m, d in candidates:
+            desc = shd.MeshDesc({"data": d, "model": m})
+            if shd.tree_bytes_per_device(specs, desc, itemsize, rules) <= budget_bytes:
+                data, model = d, m
+                break
+        else:
+            raise ValueError(
+                f"no mesh on {len(devs)} devices fits {budget_bytes/1e9:.2f} GB "
+                "per device for this param tree (larger host or budget needed)"
+            )
     if data < 1 or model < 1:
         raise ValueError(f"mesh axes must be positive, got ({data}, {model})")
-    devs = jax.devices()
     need = data * model
     if need > len(devs):
         raise ValueError(
@@ -50,8 +83,6 @@ def smallest_fitting_mesh(data: int = 1, model: int = 1):
             "XLA_FLAGS=--xla_force_host_platform_device_count=N for CPU "
             "virtual devices)"
         )
-    from jax.sharding import Mesh
-
     return Mesh(
         np.array(devs[:need]).reshape(data, model), ("data", "model")
     )

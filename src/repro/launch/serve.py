@@ -1,6 +1,13 @@
 """Serving driver: batched request decoding with the butterfly sampler.
 
     python -m repro.launch.serve --arch qwen3-4b --smoke --requests 8
+    python -m repro.launch.serve --smoke --dp 2 --tp 2   # sharded decode
+
+``--dp/--tp`` build a (data, model) mesh (``smallest_fitting_mesh``),
+shard the params through the ``repro.dist.sharding`` rules, arm
+activation constraints, and run the sampler through the shard_map'd
+counter-RNG path (``sampling.plan(mesh=...)``) — tokens are bit-identical
+to the unsharded run at a fixed key (DESIGN.md §5).
 """
 
 from __future__ import annotations
@@ -13,7 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
-from repro.models import build_model, init_params
+from repro.dist import sharding as shd
+from repro.launch.mesh import smallest_fitting_mesh
+from repro.models import build_model, init_params, logical_axes
 from repro.serve.engine import generate
 
 
@@ -27,6 +36,9 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--sampler", default="butterfly",
                     choices=["butterfly", "fenwick", "two_level", "kernel", "prefix", "gumbel"])
+    ap.add_argument("--dp", type=int, default=0,
+                    help="data-parallel degree (0 = no mesh, single device)")
+    ap.add_argument("--tp", type=int, default=1, help="tensor-parallel degree")
     args = ap.parse_args()
 
     import dataclasses
@@ -39,6 +51,17 @@ def main():
     params = init_params(jax.random.PRNGKey(0), model.specs, jnp.float32)
     rng = np.random.default_rng(0)
     B = args.requests
+
+    mesh = None
+    if args.dp > 0:
+        if B % args.dp:
+            raise SystemExit(f"--requests {B} must divide by --dp {args.dp}")
+        mesh = smallest_fitting_mesh(data=args.dp, model=args.tp)
+        params = jax.device_put(
+            params, shd.tree_shardings(params, logical_axes(model.specs), mesh)
+        )
+        shd.set_activation_sharding(mesh)
+        print(f"mesh: {dict(mesh.shape)}")
 
     if cfg.encoder_layers > 0:
         batch = {
@@ -55,7 +78,8 @@ def main():
 
     t0 = time.perf_counter()
     res = generate(model, params, batch, max_new_tokens=args.max_new,
-                   temperature=args.temperature, key=jax.random.PRNGKey(1))
+                   temperature=args.temperature, key=jax.random.PRNGKey(1),
+                   mesh=mesh)
     dt = time.perf_counter() - t0
     print(f"served {B} requests x {res.steps} tokens in {dt:.2f}s "
           f"(sampler={args.sampler}); first request: {res.tokens[0].tolist()}")

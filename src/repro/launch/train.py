@@ -36,21 +36,37 @@ def train_lm(args):
     cfg = get_config(args.arch, smoke=args.smoke)
     shape = ShapeConfig("cli", seq_len=args.seq_len, global_batch=args.batch, kind="train")
     model = build_model(cfg)
-    mesh = make_host_mesh()
+    mesh = make_host_mesh(model=args.tp)
     params = init_params(jax.random.PRNGKey(args.seed), model.specs, jnp.float32)
     opt = make_optimizer(args.optimizer, lr=args.lr, warmup=args.warmup,
                          total_steps=args.steps)
     opt_state = opt.init(params)
+
+    # Place params/optimizer state through the rules engine; the same
+    # sharding trees make restore *elastic* — a checkpoint from any other
+    # mesh lands on this one (repro.dist.fault).
+    param_axes = logical_axes(model.specs)
+    param_sh = shd.tree_shardings(params, param_axes, mesh)
+    opt_sh = shd.tree_shardings(
+        opt_state, shd.optimizer_state_axes(args.optimizer, param_axes), mesh
+    )
+    params = jax.device_put(params, param_sh)
+    opt_state = jax.device_put(opt_state, opt_sh)
+    shd.set_activation_sharding(mesh if len(jax.devices()) > 1 else None)
+
     pipe = TokenPipeline(cfg, shape, seed=args.seed)
     step_fn = jax.jit(make_train_step(model, opt, remat=args.remat))
 
     mgr = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
-    monitor = StepMonitor(num_hosts=1)
+    monitor = StepMonitor(num_hosts=jax.process_count())
     install_preemption_handler()
 
     start = 0
     if mgr and mgr.latest_step() is not None:
-        (restored, extra) = mgr.restore(like={"params": params, "opt": opt_state})
+        (restored, extra) = mgr.restore(
+            like={"params": params, "opt": opt_state},
+            shardings={"params": param_sh, "opt": opt_sh},
+        )
         params, opt_state = restored["params"], restored["opt"]
         pipe.restore(extra["cursor"])
         start = extra["step"]
@@ -62,7 +78,7 @@ def train_lm(args):
         params, opt_state, m = step_fn(params, opt_state, batch, jnp.int32(step))
         jax.block_until_ready(m.loss)
         dt = time.perf_counter() - t0
-        monitor.record([dt])
+        monitor.record([dt] * monitor.num_hosts, tokens=float(m.tokens))
         if step % args.log_every == 0:
             print(f"step {step:5d} loss {float(m.loss):.4f} ce {float(m.ce):.4f} "
                   f"gnorm {float(m.grad_norm):.2f} {dt*1e3:.0f}ms "
@@ -78,7 +94,15 @@ def train_lm(args):
     if mgr:
         mgr.save(args.steps, {"params": params, "opt": opt_state},
                  extra={"cursor": pipe.cursor(), "step": args.steps}, block=True)
-    print("training complete;", monitor.summary())
+    summary = monitor.summary()
+    if args.monitor_out:
+        import json
+
+        with open(args.monitor_out, "w") as f:
+            json.dump({"summary": summary, "hosts": monitor.summary_rows()}, f,
+                      indent=2)
+        print(f"monitor summary written to {args.monitor_out}")
+    print("training complete;", summary)
 
 
 def train_lda(args):
@@ -117,6 +141,10 @@ def main():
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree (mesh = (devices/tp, tp))")
+    ap.add_argument("--monitor-out", default="",
+                    help="write the StepMonitor summary JSON here (CI artifact)")
     args = ap.parse_args()
     if args.app == "lda":
         train_lda(args)

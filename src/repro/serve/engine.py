@@ -232,9 +232,15 @@ def generate(
     temperature: float = 1.0,
     key: Optional[jax.Array] = None,
     eos_id: Optional[int] = None,
+    mesh=None,
 ) -> GenerationResult:
     """Prefill the prompt batch, then decode ``max_new_tokens`` greedily or
-    by sampling.  Python loop around a jitted step (engine-style)."""
+    by sampling.  Python loop around a jitted step (engine-style).
+
+    ``mesh`` shards the decode sampler like :func:`make_decode_step`:
+    sequences row-shard over the mesh's data axes and the draw runs
+    through the shard_map'd counter-RNG path (the launch/serve (dp, tp)
+    wiring).  The prompt batch must divide by the data-shard count."""
     cfg = model.cfg
     key = key if key is not None else jax.random.PRNGKey(0)
     last_logits, caches = model.prefill(params, batch)
@@ -246,12 +252,12 @@ def generate(
     prefill_len = S + prefix
     caches = _pad_caches_to(caches, prefill_len + max_new_tokens)
 
-    step_fn = make_decode_step(model, temperature, batch_size=B)
+    step_fn = make_decode_step(model, temperature, batch_size=B, mesh=mesh)
     k0, key = jax.random.split(key)
     sp0 = default_sampling_params(cfg)  # model-card truncation, if any
     first_plan = _logits_plan(
         cfg, last_logits.shape[0], last_logits.shape[1],
-        str(last_logits.dtype), transforms=_sp_sig(sp0),
+        str(last_logits.dtype), mesh=mesh, transforms=_sp_sig(sp0),
     )
     first = first_plan.sample_logits(
         last_logits, k0, temperature=temperature,

@@ -7,9 +7,6 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-# repro.dist (sharding/fault/compression) is a future subsystem: skip —
-# not collection-error — until it lands (model forward passes import repro.dist.sharding at runtime)
-pytest.importorskip("repro.dist", reason="repro.dist not implemented yet")
 
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import ShapeConfig

@@ -4,12 +4,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-import pytest
 
-# repro.dist (sharding/fault/compression) is a future subsystem: skip —
-# not collection-error — until it lands (attention paths import
 # repro.dist.sharding at runtime)
-pytest.importorskip("repro.dist", reason="repro.dist not implemented yet")
 
 from repro.models.attention import (
     _sdpa,

@@ -9,9 +9,6 @@ import textwrap
 
 import pytest
 
-# repro.dist (sharding/fault/compression) is a future subsystem: skip —
-# not collection-error — until it lands (subprocess script imports repro.dist)
-pytest.importorskip("repro.dist", reason="repro.dist not implemented yet")
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

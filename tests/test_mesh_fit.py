@@ -1,0 +1,122 @@
+"""Mesh fitting through the sharding rules: ``smallest_fitting_mesh``'s
+budget search and the analytic memory model must agree with the REAL
+placement — same rules engine, one code path (launch/mesh.py)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.dist import sharding as shd
+from repro.models.params import ParamSpec
+
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _toy_specs():
+    return {
+        "emb": ParamSpec((1024, 256), ("vocab", "embed")),
+        "w": ParamSpec((256, 512), ("embed", "mlp")),
+        "b": ParamSpec((512,), (None,)),  # always replicated
+    }
+
+
+def test_estimator_divides_by_assigned_axes_only():
+    specs = _toy_specs()
+    one = shd.MeshDesc({"data": 1, "model": 1})
+    four = shd.MeshDesc({"data": 2, "model": 2})
+    total = shd.tree_bytes_per_device(specs, one, itemsize=4.0)
+    assert total == (1024 * 256 + 256 * 512 + 512) * 4.0
+    per = shd.tree_bytes_per_device(specs, four, itemsize=4.0)
+    # emb: vocab/model x embed/data -> /4; w: embed/data, mlp/model -> /4;
+    # bias replicates in full
+    assert per == (1024 * 256 / 4 + 256 * 512 / 4 + 512) * 4.0
+
+
+def test_memory_model_uses_the_rules_engine():
+    # the analytic memory model's accounting IS the engine's — not a copy
+    sys.path.insert(0, os.path.join(REPO, "benchmarks"))
+    try:
+        import memory_model
+    finally:
+        sys.path.pop(0)
+    assert memory_model._per_device_bytes is shd.tree_bytes_per_device
+    assert memory_model.MeshDesc is shd.MeshDesc
+
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.dist import sharding as shd
+    from repro.launch.mesh import smallest_fitting_mesh
+    from repro.models.params import ParamSpec, init_params
+
+    specs = {
+        "emb": ParamSpec((1024, 256), ("vocab", "embed")),
+        "w": ParamSpec((256, 512), ("embed", "mlp")),
+        "b": ParamSpec((512,), (None,)),
+    }
+    total = shd.tree_bytes_per_device(
+        specs, shd.MeshDesc({"data": 1, "model": 1}), itemsize=4.0
+    )
+
+    # generous budget -> a single device suffices
+    m1 = smallest_fitting_mesh(specs=specs, budget_bytes=total, itemsize=4.0)
+    # just under the single-device bytes -> must grow
+    m2 = smallest_fitting_mesh(
+        specs=specs, budget_bytes=total * 0.6, itemsize=4.0
+    )
+    # nothing fits -> ValueError
+    try:
+        smallest_fitting_mesh(specs=specs, budget_bytes=512.0, itemsize=4.0)
+        unfittable = "no error"
+    except ValueError as e:
+        unfittable = "raised"
+
+    # cross-check: REAL placement on the chosen mesh holds exactly the
+    # bytes the estimator predicted (per device, counting device 0)
+    params = init_params(jax.random.PRNGKey(0), specs, jnp.float32)
+    sh = shd.tree_shardings(params, {k: s.axes for k, s in specs.items()}, m2)
+    placed = jax.device_put(params, sh)
+    d0 = jax.devices()[0]
+    actual = 0
+    for leaf in jax.tree.leaves(placed):
+        for s in leaf.addressable_shards:
+            if s.device == d0:
+                actual += s.data.size * leaf.dtype.itemsize
+    est = shd.tree_bytes_per_device(
+        specs, shd.MeshDesc(dict(m2.shape)), itemsize=4.0
+    )
+    print(json.dumps({
+        "m1": dict(m1.shape), "m2": dict(m2.shape),
+        "unfittable": unfittable, "actual": actual, "est": est,
+    }))
+    """
+)
+
+
+@pytest.mark.slow
+def test_budget_search_agrees_with_real_placement():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True, text=True,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["m1"] == {"data": 1, "model": 1}
+    m2 = res["m2"]
+    assert m2["data"] * m2["model"] == 2, m2
+    assert res["unfittable"] == "raised"
+    assert res["actual"] == res["est"], (
+        "rules-engine estimate and real per-device placement disagree"
+    )

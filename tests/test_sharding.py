@@ -4,11 +4,7 @@ resolve against a mesh *description*, so we build tiny host meshes)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
-# repro.dist (sharding/fault/compression) is a future subsystem: skip —
-# not collection-error — until it lands (collection imports repro.dist directly)
-pytest.importorskip("repro.dist", reason="repro.dist not implemented yet")
 from jax.sharding import PartitionSpec as P
 
 from repro.dist import sharding as shd

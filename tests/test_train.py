@@ -9,9 +9,6 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-# repro.dist (sharding/fault/compression) is a future subsystem: skip —
-# not collection-error — until it lands (collection imports repro.dist directly)
-pytest.importorskip("repro.dist", reason="repro.dist not implemented yet")
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.data.pipeline import TokenPipeline

@@ -6,12 +6,8 @@ import dataclasses
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
-# repro.dist (sharding/fault/compression) is a future subsystem: skip —
-# not collection-error — until it lands (model forward passes import
 # repro.dist.sharding at runtime)
-pytest.importorskip("repro.dist", reason="repro.dist not implemented yet")
 
 from repro.configs.base import ModelConfig
 from repro.models import build_model, init_params
