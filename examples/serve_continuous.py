@@ -1,0 +1,72 @@
+"""Continuous batching end-to-end: mixed per-request sampling params
+through one compiled decode step.
+
+Ten requests — different prompt lengths, token budgets, seeds, and
+sampling settings (greedy, top-k, nucleus, min-p) — are submitted to a
+2-layer toy model's engine over asyncio, churn through 4 recycled decode
+slots, and finish with per-request TTFT/latency stats.  The punchline is
+the compile counter at the end: every one of those combinations ran
+through a decode step that was traced exactly once.
+
+    PYTHONPATH=src python examples/serve_continuous.py
+"""
+
+import asyncio
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SamplerSpec
+from repro.models import build_model, init_params
+from repro.serve import ContinuousBatchingEngine, Request, SamplingParams
+
+CFG = ModelConfig(
+    name="toy", family="dense", num_layers=2, d_model=64, num_heads=4,
+    num_kv_heads=2, d_ff=128, vocab_size=256,
+    sampler=SamplerSpec(method="butterfly", W=16),
+)
+
+
+async def main():
+    model = build_model(CFG)
+    params = init_params(jax.random.PRNGKey(0), model.specs, jnp.float32)
+    engine = ContinuousBatchingEngine(
+        model, params, max_slots=4, max_len=64, eos_id=None
+    )
+    engine.warmup(max_prompt_len=16)
+
+    mix = [
+        ("greedy", SamplingParams(temperature=0.0)),
+        ("top-k 20", SamplingParams(temperature=0.8, top_k=20)),
+        ("nucleus .9", SamplingParams(temperature=1.0, top_p=0.9)),
+        ("min-p .05", SamplingParams(temperature=1.2, min_p=0.05)),
+        ("hot + tight", SamplingParams(temperature=1.5, top_k=10, top_p=0.8)),
+    ]
+    rng = np.random.default_rng(0)
+    await engine.start()
+    reqs = []
+    for i in range(10):
+        label, sp = mix[i % len(mix)]
+        req = Request(
+            prompt=rng.integers(0, CFG.vocab_size, int(rng.integers(1, 12))),
+            max_new_tokens=int(rng.integers(4, 16)),
+            seed=i,
+            sampling=sp,
+        )
+        reqs.append((label, await engine.submit(req)))
+    await asyncio.gather(*(r.future for _, r in reqs))
+    await engine.stop()
+
+    for label, r in reqs:
+        print(f"req {r.id:2d} [{label:>11s}] prompt {r.prompt_len:2d} "
+              f"ttft {r.ttft * 1e3:6.1f} ms  e2e {r.e2e_latency * 1e3:6.1f} ms  "
+              f"-> {r.output_tokens}")
+    cs = engine.compile_stats()
+    print(f"\n{engine.stats()['finished']} requests through "
+          f"{engine.max_slots} slots; decode-step compiles: "
+          f"{cs['decode_step_compiles']} (zero retraces under churn)")
+
+
+if __name__ == "__main__":
+    asyncio.run(main())

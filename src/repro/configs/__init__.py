@@ -11,6 +11,7 @@ from repro.configs.base import (
     ModelConfig,
     MoEConfig,
     SamplerSpec,
+    ServeSpec,
     ShapeConfig,
     SSMConfig,
     shapes_for,

@@ -44,6 +44,24 @@ class SamplerSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """Continuous-batching serve defaults (``repro.serve.batching``).
+
+    ``max_slots`` is the fixed decode batch width (one compiled step, all
+    request churn expressed as per-slot data); ``max_waiting`` bounds the
+    admission queue (submissions beyond it are rejected, not queued);
+    ``max_len`` is the per-slot KV budget (prompt + generated tokens);
+    ``prefill_chunk`` caps how many queued requests are prefilled between
+    consecutive decode steps (prefill/decode interleaving — 0 = no cap).
+    """
+
+    max_slots: int = 8
+    max_waiting: int = 64
+    max_len: int = 256
+    prefill_chunk: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
 class MLAConfig:
     q_lora_rank: int = 768
     kv_lora_rank: int = 256
@@ -138,6 +156,9 @@ class ModelConfig:
     sampler: Optional[SamplerSpec] = None
     sampler_method: str = "auto"
     sampler_W: int = 0
+    # continuous-batching serve defaults (slots / queue depth / KV budget);
+    # None -> the ServeSpec defaults
+    serve: Optional[ServeSpec] = None
 
     @property
     def sampler_spec(self) -> SamplerSpec:
@@ -146,6 +167,11 @@ class ModelConfig:
         if self.sampler is not None:
             return self.sampler
         return SamplerSpec(method=self.sampler_method, W=self.sampler_W)
+
+    @property
+    def serve_spec(self) -> ServeSpec:
+        """The effective continuous-batching defaults."""
+        return self.serve if self.serve is not None else ServeSpec()
 
     @property
     def resolved_head_dim(self) -> int:

@@ -2,12 +2,20 @@
 
     python -m repro.launch.serve --arch qwen3-4b --smoke --requests 8
     python -m repro.launch.serve --smoke --dp 2 --tp 2   # sharded decode
+    python -m repro.launch.serve --smoke --continuous    # slot-recycled engine
 
 ``--dp/--tp`` build a (data, model) mesh (``smallest_fitting_mesh``),
 shard the params through the ``repro.dist.sharding`` rules, arm
 activation constraints, and run the sampler through the shard_map'd
 counter-RNG path (``sampling.plan(mesh=...)``) — tokens are bit-identical
 to the unsharded run at a fixed key (DESIGN.md §5).
+
+``--continuous`` serves the same requests through the continuous-batching
+engine (``repro.serve.batching``) instead of lockstep ``generate``:
+varying prompt/output lengths and heterogeneous per-request sampling
+params churn through ``ServeSpec.max_slots`` recycled slots behind ONE
+compiled decode step (compile counters are printed as proof).  Composes
+with ``--dp/--tp`` (decoder-only archs only).
 """
 
 from __future__ import annotations
@@ -39,6 +47,11 @@ def main():
     ap.add_argument("--dp", type=int, default=0,
                     help="data-parallel degree (0 = no mesh, single device)")
     ap.add_argument("--tp", type=int, default=1, help="tensor-parallel degree")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through the continuous-batching engine "
+                         "(slot recycling, per-request sampling params)")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode slots for --continuous (0 = ServeSpec default)")
     args = ap.parse_args()
 
     import dataclasses
@@ -62,6 +75,45 @@ def main():
         )
         shd.set_activation_sharding(mesh)
         print(f"mesh: {dict(mesh.shape)}")
+
+    if args.continuous:
+        from repro.serve import ContinuousBatchingEngine, Request, SamplingParams
+
+        mix = (
+            SamplingParams(temperature=0.0),
+            SamplingParams(temperature=args.temperature, top_k=40),
+            SamplingParams(temperature=args.temperature, top_p=0.9),
+            SamplingParams(temperature=args.temperature, min_p=0.05),
+        )
+        reqs = [
+            Request(
+                prompt=rng.integers(
+                    0, cfg.vocab_size, int(rng.integers(1, args.prompt_len + 1))
+                ).astype(np.int32),
+                max_new_tokens=int(rng.integers(1, args.max_new + 1)),
+                seed=i,
+                sampling=mix[i % len(mix)],
+            )
+            for i in range(B)
+        ]
+        eng = ContinuousBatchingEngine(
+            model, params,
+            max_slots=args.slots or None,
+            max_len=args.prompt_len + args.max_new,
+            max_waiting=B, temperature=args.temperature, mesh=mesh,
+        )
+        eng.warmup(max_prompt_len=args.prompt_len)
+        t0 = time.perf_counter()
+        done = eng.run(reqs)
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.output_tokens) for r in done)
+        st, cs = eng.stats(), eng.compile_stats()
+        print(f"served {len(done)} requests ({toks} tokens) through "
+              f"{eng.max_slots} slots in {dt:.2f}s "
+              f"({toks / dt:.0f} tok/s, {st['steps']} steps); "
+              f"decode-step compiles: {cs['decode_step_compiles']}")
+        print(f"first request: {done[0].output_tokens}")
+        return
 
     if cfg.encoder_layers > 0:
         batch = {

@@ -79,7 +79,11 @@ def _sdpa(q, k, v, mask, softcap: float = 0.0, kv_sharded: bool = False):
         scores = constrain_activation(scores, ("batch", None, None, "act_kv"))
     if softcap > 0:
         scores = jnp.tanh(scores / softcap) * softcap
-    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    # (Sq, Sk) masks broadcast over batch; (B, Sq, Sk) masks are per-row
+    # (continuous batching: each slot attends its own prefix length)
+    scores = jnp.where(
+        mask[None, None] if mask.ndim == 2 else mask[:, None], scores, NEG_INF
+    )
     probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     return jnp.einsum("bhqs,bshv->bqhv", probs, v)
 
@@ -87,13 +91,28 @@ def _sdpa(q, k, v, mask, softcap: float = 0.0, kv_sharded: bool = False):
 def _cache_update(cache_arr, new, pos):
     """Write one decode step into the cache.
 
+    ``pos`` is the scalar write position shared by the batch, or a (B,)
+    vector of per-row positions (continuous batching: each slot writes at
+    its own sequence length).
+
     Baseline: dynamic_update_slice (fast slice write, but GSPMD must
     all-gather a seq-sharded cache to update at a traced position).  Under
-    the activation-sharding lever: one-hot masked update — elementwise, so
-    the cache never leaves its shards (full read+write instead of a slice
-    write: ~67MB/layer locally vs multi-GB of all-gather per layer)."""
+    the activation-sharding lever — and always for per-row positions —
+    a one-hot masked update: elementwise, so the cache never leaves its
+    shards (full read+write instead of a slice write: ~67MB/layer locally
+    vs multi-GB of all-gather per layer)."""
     from repro.dist import sharding as shd
 
+    pos = jnp.asarray(pos)
+    if pos.ndim == 1:
+        S = cache_arr.shape[1]
+        oh = jnp.arange(S)[None, :] == pos[:, None]           # (B, S)
+        oh = oh.reshape(oh.shape + (1,) * (cache_arr.ndim - 2))
+        upd = jnp.where(oh, new.astype(cache_arr.dtype), cache_arr)
+        if shd._ACT_CTX.get("mesh") is not None:
+            axes = ("batch", "act_kv") + (None,) * (cache_arr.ndim - 2)
+            upd = shd.constrain_activation(upd, axes)
+        return upd
     if shd._ACT_CTX.get("mesh") is None:
         return jax.lax.dynamic_update_slice_in_dim(cache_arr, new, pos, axis=1)
     S = cache_arr.shape[1]
@@ -200,15 +219,28 @@ def gqa_attend(
         new_cache = None
         kv_for_prefill = (k, v)
     else:
+        cache_pos = jnp.asarray(cache_pos)
         ck = _cache_update(cache["k"], k, cache_pos)
         cv = _cache_update(cache["v"], v, cache_pos)
         k_pos = jnp.arange(ck.shape[1])
-        k_valid = k_pos <= cache_pos
-        # window relative to the *query* position (cache_pos), not k order
-        mask = attention_mask(
-            jnp.broadcast_to(jnp.asarray(cache_pos)[None], positions.shape),
-            k_pos, causal=False, window=window, k_valid=k_valid,
-        )
+        if cache_pos.ndim == 1:
+            # per-row positions: row b attends its OWN prefix k <= pos_b
+            # (and its own window), so one fixed-shape decode batch can
+            # hold sequences of different lengths — the continuous-
+            # batching invariant that keeps recycled slots isolated
+            qp = cache_pos[:, None]                           # (B, Sq=1)
+            mask = k_pos[None, None, :] <= qp[:, :, None]     # (B, Sq, Sk)
+            win = jnp.asarray(window, jnp.int32)
+            win_m = k_pos[None, None, :] > qp[:, :, None] - win
+            mask &= jnp.where(win > 0, win_m, True)
+        else:
+            k_valid = k_pos <= cache_pos
+            # window relative to the *query* position (cache_pos), not k
+            # order
+            mask = attention_mask(
+                jnp.broadcast_to(cache_pos[None], positions.shape),
+                k_pos, causal=False, window=window, k_valid=k_valid,
+            )
         out = _sdpa(q, ck, cv, mask, cfg.attn_softcap, kv_sharded=True)
         new_cache = {"k": ck, "v": cv}
         kv_for_prefill = None
@@ -351,7 +383,12 @@ def mla_attend_decode(params, x, cache, cache_pos, cfg: ModelConfig):
     """
     m: MLAConfig = cfg.mla
     B, S, _ = x.shape  # S == 1
-    positions = jnp.full((S,), 0, jnp.int32) + cache_pos
+    cache_pos = jnp.asarray(cache_pos)
+    per_row = cache_pos.ndim == 1
+    positions = (
+        cache_pos[:, None] if per_row
+        else jnp.full((S,), 0, jnp.int32) + cache_pos
+    )
     c_new, kpe_new = _mla_latents(params, x, positions, cfg)
     c_kv = _cache_update(cache["c_kv"], c_new, cache_pos)
     k_pe = _cache_update(cache["k_pe"], kpe_new, cache_pos)
@@ -363,8 +400,12 @@ def mla_attend_decode(params, x, cache, cache_pos, cfg: ModelConfig):
         + jnp.einsum("bsnh,bth->bnst", q_pe, k_pe)
     ).astype(jnp.float32) * scale
     k_pos = jnp.arange(c_kv.shape[1])
-    valid = k_pos <= cache_pos
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    if per_row:
+        valid = k_pos[None, :] <= cache_pos[:, None]          # (B, T)
+        scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    else:
+        valid = k_pos <= cache_pos
+        scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
     ctx = jnp.einsum("bnst,btr->bsnr", probs, c_kv)
     out = jnp.einsum("bsnr,rnh->bsnh", ctx, params["wuv"])

@@ -52,12 +52,14 @@ def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
 
 
 def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
-    """x: (B, S, H, D) or (B, S, D); positions: (S,) shared across batch."""
+    """x: (B, S, H, D) or (B, S, D); positions: (S,) shared across batch,
+    or (B, S) per-row (continuous batching: every slot decodes at its own
+    sequence position)."""
     head_dim = x.shape[-1]
-    freqs = rope_frequencies(head_dim, theta)               # (D/2,)
-    angles = positions[:, None].astype(jnp.float32) * freqs  # (S, D/2)
-    if x.ndim == 4:                                          # add heads axis
-        angles = angles[:, None, :]
+    freqs = rope_frequencies(head_dim, theta)                 # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    if x.ndim == 4:                                            # add heads axis
+        angles = angles[..., None, :]
     cos, sin = jnp.cos(angles), jnp.sin(angles)
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)

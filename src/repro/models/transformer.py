@@ -331,11 +331,19 @@ def lm_decode(
     params: Dict,
     caches: Dict,
     tokens: jnp.ndarray,      # (B, 1) current tokens
-    cache_pos: jnp.ndarray,   # scalar int32 write position
+    cache_pos: jnp.ndarray,   # scalar int32, or (B,) per-row positions
 ):
-    """One decode step.  Returns (logits (B, V), new caches)."""
+    """One decode step.  Returns (logits (B, V), new caches).
+
+    ``cache_pos`` is a scalar write position shared by the batch, or a
+    (B,) vector of per-row positions — the continuous-batching form,
+    where every slot of one fixed-shape decode batch sits at its own
+    sequence length (repro.serve.batching)."""
     x = embed(params["embed"], tokens, scale=cfg.embedding_scale)
+    cache_pos = jnp.asarray(cache_pos)
     positions = cache_pos[None] if cache_pos.ndim == 0 else cache_pos
+    if cache_pos.ndim == 1:
+        positions = cache_pos[:, None]    # (B, S=1) per-row RoPE positions
     x, caches_out, _ = stack_apply(
         cfg,
         params["layers"],

@@ -1,0 +1,30 @@
+"""Serving layer: single-step factories (``engine``) and the
+continuous-batching engine (``batching`` + ``request`` + ``scheduler``).
+"""
+
+from repro.serve.batching import ContinuousBatchingEngine
+from repro.serve.engine import (
+    SamplingParams,
+    default_sampling_params,
+    generate,
+    make_decode_step,
+    make_prefill_step,
+    make_serve_step,
+)
+from repro.serve.request import FinishReason, Request, RequestState
+from repro.serve.scheduler import QueueFullError, Scheduler
+
+__all__ = [
+    "ContinuousBatchingEngine",
+    "SamplingParams",
+    "default_sampling_params",
+    "generate",
+    "make_decode_step",
+    "make_prefill_step",
+    "make_serve_step",
+    "FinishReason",
+    "Request",
+    "RequestState",
+    "QueueFullError",
+    "Scheduler",
+]

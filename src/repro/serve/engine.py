@@ -24,6 +24,7 @@ count for a fixed key (DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Optional
 
 import jax
@@ -120,6 +121,30 @@ def _logits_plan(cfg: ModelConfig, B: int, V: int, dtype_name: str,
     )
 
 
+# sentinel distinguishing "``sampling`` not given -> factory defaults"
+# from an explicit ``sampling=None`` -> plain untruncated decode
+_SP_UNSET = object()
+
+
+def _chain_for(sp: "SamplingParams", sig: str):
+    """The truncation chain matching a *static* signature, carrying THIS
+    call's (possibly traced) parameter leaves.  Rebuilding the chain from
+    traced leaves via ``sp.transforms()`` would resurrect statically
+    dropped stages (a tracer is never "statically disabled"); selecting
+    stages by the signature keeps the executable, the plan's memo key,
+    and the autotune bucket mutually consistent."""
+    from repro.sampling import transforms as _tr
+
+    out = []
+    if "k" in sig:
+        out.append(_tr.TopK(sp.top_k))
+    if "p" in sig:
+        out.append(_tr.TopP(sp.top_p))
+    if "m" in sig:
+        out.append(_tr.MinP(sp.min_p))
+    return tuple(out)
+
+
 def make_decode_step(
     model: Model,
     temperature: float = 1.0,
@@ -149,47 +174,48 @@ def make_decode_step(
     count at a fixed key (DESIGN.md §5).  Requires ``batch_size`` (or the
     first traced batch) divisible by the data-shard count.
 
-    ``sampling_params`` turns on truncated decode: the returned step
-    takes an optional trailing ``sampling`` argument (default: the value
-    given here) whose top-k/top-p/min-p/temperature leaves are *traced* —
-    per-request, even per-row heterogeneous, parameters reuse one
-    compiled step.  When omitted, the model config's
-    ``SamplerSpec.top_k/top_p/min_p`` defaults apply (``None`` for
-    configs that don't truncate — those keep the exact legacy step).
-    Execution is butterfly-native (fused threshold pass, no vocab sort —
-    see ``repro.sampling.transforms``)."""
+    The returned step ALWAYS accepts an optional trailing ``sampling``
+    argument, whatever the factory arguments were: omitted, it falls back
+    to ``sampling_params`` (else the model config's
+    ``SamplerSpec.top_k/top_p/min_p`` model-card defaults, else plain
+    untruncated decode); an explicit ``sampling=None`` forces the plain
+    untruncated path for that call; a :class:`SamplingParams` runs
+    truncated decode with *that call's* parameters — its leaves are
+    traced, so per-request (even per-row ``(B,)`` heterogeneous) values
+    reuse one compiled executable.  The truncation chain's *shape* (which
+    stages exist) is resolved per call from the concrete parameters and
+    threaded statically, so a call can never silently inherit an earlier
+    call's (or the factory default's) stage set — only calls that change
+    which stages are statically enabled retrace.  Execution is
+    butterfly-native (fused threshold pass, no vocab sort — see
+    ``repro.sampling.transforms``)."""
     cfg = model.cfg
     sp0 = sampling_params if sampling_params is not None else (
         default_sampling_params(cfg)
     )
-    if sp0 is None:
-        if batch_size is not None:
-            _logits_plan(cfg, batch_size, cfg.padded_vocab, "float32",
-                         draws=num_samples, mesh=mesh)
-
-        @jax.jit
-        def step(params, caches, token, pos, key):
-            logits, caches = model.decode(params, caches, token, pos)
-            p = _logits_plan(
-                cfg, logits.shape[0], logits.shape[1], str(logits.dtype),
-                draws=num_samples, mesh=mesh,
-            )
-            nxt = p.sample_logits(
-                logits, key, temperature=temperature, num_samples=num_samples
-            )
-            if num_samples == 1:
-                return nxt[:, None].astype(jnp.int32), logits, caches
-            return nxt.T.astype(jnp.int32), logits, caches  # (B, num_samples)
-
-        return step
-
-    sig = _sp_sig(sp0)
     if batch_size is not None:
         _logits_plan(cfg, batch_size, cfg.padded_vocab, "float32",
-                     draws=num_samples, mesh=mesh, transforms=sig)
+                     draws=num_samples, mesh=mesh, transforms=_sp_sig(sp0))
+
+    def _shape(nxt, logits, caches):
+        if num_samples == 1:
+            return nxt[:, None].astype(jnp.int32), logits, caches
+        return nxt.T.astype(jnp.int32), logits, caches  # (B, num_samples)
 
     @jax.jit
-    def trunc_step(params, caches, token, pos, key, sampling=sp0):
+    def plain_step(params, caches, token, pos, key):
+        logits, caches = model.decode(params, caches, token, pos)
+        p = _logits_plan(
+            cfg, logits.shape[0], logits.shape[1], str(logits.dtype),
+            draws=num_samples, mesh=mesh,
+        )
+        nxt = p.sample_logits(
+            logits, key, temperature=temperature, num_samples=num_samples
+        )
+        return _shape(nxt, logits, caches)
+
+    @functools.partial(jax.jit, static_argnames=("sig",))
+    def trunc_step(params, caches, token, pos, key, sampling, sig):
         logits, caches = model.decode(params, caches, token, pos)
         p = _logits_plan(
             cfg, logits.shape[0], logits.shape[1], str(logits.dtype),
@@ -199,22 +225,49 @@ def make_decode_step(
             sampling.temperature if sampling.temperature is not None
             else temperature
         )
+        tr = _chain_for(sampling, sig)
         nxt = p.sample_logits(
             logits, key, temperature=temp, num_samples=num_samples,
-            transforms=sampling.transforms(),
+            transforms=tr if tr else None,
         )
-        if num_samples == 1:
-            return nxt[:, None].astype(jnp.int32), logits, caches
-        return nxt.T.astype(jnp.int32), logits, caches
+        return _shape(nxt, logits, caches)
 
-    return trunc_step
+    def step(params, caches, token, pos, key, sampling=_SP_UNSET):
+        sp = sp0 if sampling is _SP_UNSET else sampling
+        if sp is None:
+            return plain_step(params, caches, token, pos, key)
+        return trunc_step(params, caches, token, pos, key, sp, sig=_sp_sig(sp))
+
+    # the zero-retrace gate reads these (tests, serve bench)
+    step.plain_cache_size = plain_step._cache_size
+    step.trunc_cache_size = trunc_step._cache_size
+    return step
+
+
+# cache leaves with a (L, B, S, ...) sequence axis (axis 2)
+_SEQ_CACHE_LEAVES = frozenset({"k", "v", "c_kv", "k_pe", "self_k", "self_v"})
 
 
 def _pad_caches_to(caches, target_len: int):
-    """Grow attention caches (L, B, S, ...) along the seq axis to target."""
+    """Grow attention caches (L, B, S, ...) along the seq axis to target.
+
+    Caches already at (or beyond) ``target_len`` are returned *as-is* —
+    the identical pytree, no per-leaf dispatch — so callers can re-pad
+    unconditionally (repeated ``generate`` over one cache, the serve
+    engine's admission path) without paying a device round-trip for a
+    no-op."""
+    def _names(path):
+        return {getattr(k, "key", None) for k in path}
+
+    if all(
+        leaf.shape[2] >= target_len
+        for path, leaf in jax.tree_util.tree_leaves_with_path(caches)
+        if _names(path) & _SEQ_CACHE_LEAVES
+    ):
+        return caches
+
     def pad(path, leaf):
-        names = {getattr(k, "key", None) for k in path}
-        if names & {"k", "v", "c_kv", "k_pe", "self_k", "self_v"}:
+        if _names(path) & _SEQ_CACHE_LEAVES:
             cur = leaf.shape[2]
             if cur < target_len:
                 pads = [(0, 0), (0, 0), (0, target_len - cur)] + [(0, 0)] * (leaf.ndim - 3)

@@ -63,3 +63,98 @@ def test_eos_early_stop(setup):
     r = generate(model, params, {"tokens": toks}, max_new_tokens=8,
                  temperature=0.0, eos_id=int(1e9))  # never fires
     assert r.tokens.shape[1] == 8
+
+# -- make_decode_step: per-call sampling params (regression) -----------------
+
+
+def test_decode_step_explicit_none_matches_default_plain(setup):
+    """An explicit ``sampling=None`` must run the plain untruncated path,
+    not crash on the factory default's attributes (the old two-signature
+    factory either TypeError'd or dereferenced None)."""
+    from repro.serve.engine import make_decode_step
+
+    model, params, _ = setup
+    step = make_decode_step(model, temperature=0.9, batch_size=2)
+    caches = init_params(jax.random.PRNGKey(0), model.cache_specs(2, 8), jnp.float32)
+    tok = jnp.ones((2, 1), jnp.int32)
+    key = jax.random.PRNGKey(1)
+    a, _, _ = step(params, caches, tok, jnp.int32(0), key)
+    b, _, _ = step(params, caches, tok, jnp.int32(0), key, sampling=None)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_decode_step_no_stale_params_across_calls(setup):
+    """The stale-params regression: after a call with explicit truncation,
+    an argument-less call must return to the factory defaults — never
+    silently reuse the previous call's params (and vice versa)."""
+    from repro.serve.engine import SamplingParams, make_decode_step
+
+    model, params, _ = setup
+    step = make_decode_step(model, temperature=0.9, batch_size=2)
+    caches = init_params(jax.random.PRNGKey(0), model.cache_specs(2, 8), jnp.float32)
+    tok = jnp.ones((2, 1), jnp.int32)
+    key = jax.random.PRNGKey(1)
+
+    base, logits, _ = step(params, caches, tok, jnp.int32(0), key)
+    # top_k=1 collapses to argmax — provably different behavior
+    g, _, _ = step(params, caches, tok, jnp.int32(0), key,
+                   sampling=SamplingParams(top_k=1))
+    np.testing.assert_array_equal(
+        np.asarray(g[:, 0]), np.argmax(np.asarray(logits, np.float32), -1)
+    )
+    # swap back: default call must NOT inherit top_k=1
+    again, _, _ = step(params, caches, tok, jnp.int32(0), key)
+    np.testing.assert_array_equal(np.asarray(again), np.asarray(base))
+
+
+def test_decode_step_per_call_chain_not_factory_chain(setup):
+    """A call whose params enable a stage the factory default dropped
+    (factory: no truncation; call: top_k=1) must run that stage — the
+    chain is derived from the call's params, not captured at make time."""
+    from repro.serve.engine import SamplingParams, make_decode_step
+
+    model, params, _ = setup
+    # factory default: config doesn't truncate -> sp0 is None
+    step = make_decode_step(model, temperature=1.3, batch_size=3)
+    caches = init_params(jax.random.PRNGKey(0), model.cache_specs(3, 8), jnp.float32)
+    tok = jnp.array([[1], [2], [3]], jnp.int32)
+    key = jax.random.PRNGKey(3)
+    t, logits, _ = step(params, caches, tok, jnp.int32(0), key,
+                        sampling=SamplingParams(top_k=1))
+    np.testing.assert_array_equal(
+        np.asarray(t[:, 0]), np.argmax(np.asarray(logits, np.float32), -1)
+    )
+
+
+def test_decode_step_heterogeneous_rows_one_compile(setup):
+    """Per-row (B,) parameter arrays trace once; different values reuse
+    the same executable (the zero-retrace property at the step level)."""
+    from repro.serve.engine import SamplingParams, make_decode_step
+
+    model, params, _ = setup
+    step = make_decode_step(model, batch_size=3)
+    caches = init_params(jax.random.PRNGKey(0), model.cache_specs(3, 8), jnp.float32)
+    tok = jnp.array([[1], [2], [3]], jnp.int32)
+    key = jax.random.PRNGKey(4)
+    spa = SamplingParams(top_k=jnp.array([1, 5, 0]), top_p=jnp.array([1.0, 0.9, 0.8]))
+    spb = SamplingParams(top_k=jnp.array([3, 0, 2]), top_p=jnp.array([0.7, 1.0, 0.9]))
+    step(params, caches, tok, jnp.int32(0), key, sampling=spa)
+    n = step.trunc_cache_size()
+    step(params, caches, tok, jnp.int32(0), key, sampling=spb)
+    assert step.trunc_cache_size() == n == 1
+
+
+# -- _pad_caches_to: no-op fast path (regression) ----------------------------
+
+
+def test_pad_caches_noop_returns_identity(setup):
+    from repro.serve.engine import _pad_caches_to
+
+    model, params, _ = setup
+    caches = init_params(jax.random.PRNGKey(0), model.cache_specs(2, 8), jnp.float32)
+    grown = _pad_caches_to(caches, 16)
+    assert grown is not caches
+    # second call at the same target: the identical pytree, no dispatch
+    assert _pad_caches_to(grown, 16) is grown
+    assert _pad_caches_to(grown, 12) is grown  # already beyond target
+    assert _pad_caches_to(caches, 8) is caches
