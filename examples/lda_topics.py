@@ -3,6 +3,11 @@ with planted topics, using the paper's butterfly sampler for the z-draws,
 and report perplexity + topic recovery over iterations.
 
     PYTHONPATH=src python examples/lda_topics.py [--iters 60] [--method butterfly]
+
+``--sparse`` swaps the z-draw for the sparsity-aware MH-alias sweep
+(repro.lda.sparse) — same LDAState, sublinear per-token cost in K; try
+it with ``--K 512`` and a Zipf corpus (``--zipf``) to see the regime it
+was built for.
 """
 
 import argparse
@@ -12,6 +17,7 @@ import jax
 import numpy as np
 
 from repro.lda import (
+    SparseSweepCache,
     gibbs_step,
     init_state,
     perplexity,
@@ -30,24 +36,42 @@ def main():
     ap.add_argument("--M", type=int, default=256)
     ap.add_argument("--V", type=int, default=500)
     ap.add_argument("--K", type=int, default=12)
+    ap.add_argument("--sparse", action="store_true",
+                    help="use the sparse MH-alias sweep for the z-draws")
+    ap.add_argument("--mh-steps", type=int, default=2)
+    ap.add_argument("--zipf", action="store_true",
+                    help="Zipfian word marginal (the sparse sweep's regime)")
     args = ap.parse_args()
 
-    corpus = synthesize_corpus(seed=0, M=args.M, V=args.V, K=args.K, avg_len=70.5)
+    corpus = synthesize_corpus(seed=0, M=args.M, V=args.V, K=args.K, avg_len=70.5,
+                               zipf_exponent=1.05 if args.zipf else None)
     print(f"corpus: {corpus.num_docs} docs, {corpus.total_words} words, "
           f"V={corpus.vocab_size}, planted K={args.K}")
     state = init_state(jax.random.PRNGKey(0), corpus, args.K)
     # per-chunk Categorical distributions, held across sweeps and refreshed
-    # each iteration from the new theta/phi (the paper's reuse pattern)
+    # each iteration from the new theta/phi (the paper's reuse pattern);
+    # the sparse path carries its counts/capacity bucket the same way
     dists = {}
-    print(f"{'iter':>5} {'perplexity':>11} {'recovery':>9} {'s/iter':>7}")
+    sparse_cache = SparseSweepCache()
+    tokens = corpus.total_words
+    print(f"{'iter':>5} {'perplexity':>11} {'recovery':>9} {'s/iter':>7} {'tok/s':>9}")
     t0 = time.perf_counter()
     for it in range(args.iters):
-        state = gibbs_step(state, corpus, method=args.method, W=32, dists=dists)
+        t_it = time.perf_counter()
+        if args.sparse:
+            state = gibbs_step(state, corpus, sparse=True,
+                               sparse_cache=sparse_cache,
+                               mh_steps=args.mh_steps)
+        else:
+            state = gibbs_step(state, corpus, method=args.method, W=32,
+                               dists=dists)
+        jax.block_until_ready(state.theta)
+        tps = tokens / max(time.perf_counter() - t_it, 1e-9)
         if it % 10 == 0 or it == args.iters - 1:
             p = perplexity(state, corpus)
             r = topic_recovery_score(np.array(state.phi), corpus.true_phi)
             dt = (time.perf_counter() - t0) / (it + 1)
-            print(f"{it:5d} {p:11.1f} {r:9.3f} {dt:7.3f}")
+            print(f"{it:5d} {p:11.1f} {r:9.3f} {dt:7.3f} {tps:9.0f}")
     print("\ntop words per topic (first 4 topics):")
     for k in range(min(4, args.K)):
         print(f"  topic {k}: {top_words(np.array(state.phi), k, 8).tolist()}")

@@ -37,6 +37,7 @@ from repro.autotune.cache import (
 from repro.autotune.cost_model import (
     BACKENDS,
     FACTORED_METHODS,
+    SPARSE_METHODS,
     BackendParams,
     choose,
     default_tiles,
@@ -70,13 +71,17 @@ def resolve(
     has_key: bool = True,
     factored: bool = False,
     devices: int = 1,
+    sparse: bool = False,
+    kd=None,
 ):
     """Module-level convenience: the global tuner's (method, W) for a
     workload descriptor (``devices > 1``: B is the per-shard row count
-    of a mesh-sharded workload; the bucket is topology-tagged)."""
+    of a mesh-sharded workload; the bucket is topology-tagged;
+    ``sparse=True``: the LDA sweep can hold sparse doc-topic counts, so
+    the sublinear ``sparse_mh`` candidate competes)."""
     return get_tuner().resolve(
         B, K, draws=draws, dtype_name=dtype_name, has_key=has_key,
-        factored=factored, devices=devices,
+        factored=factored, devices=devices, sparse=sparse, kd=kd,
     )
 
 
@@ -89,11 +94,13 @@ def resolve_full(
     has_key: bool = True,
     factored: bool = False,
     devices: int = 1,
+    sparse: bool = False,
+    kd=None,
 ) -> Resolution:
     """Full resolution including the tiled-kernel tb/tk launch params."""
     return get_tuner().resolve_full(
         B, K, draws=draws, dtype_name=dtype_name, has_key=has_key,
-        factored=factored, devices=devices,
+        factored=factored, devices=devices, sparse=sparse, kd=kd,
     )
 
 
@@ -114,7 +121,8 @@ def reset() -> None:
 
 
 __all__ = [
-    "BACKENDS", "BENCH_SCHEMA", "FACTORED_METHODS", "SCHEMA", "BackendParams",
+    "BACKENDS", "BENCH_SCHEMA", "FACTORED_METHODS", "SCHEMA",
+    "SPARSE_METHODS", "BackendParams",
     "Resolution", "TableCache", "Tuner", "TuningCache", "bucket_key",
     "candidate_methods", "choose", "content_digest", "default_cache_path",
     "default_tiles", "default_w", "get_table_cache", "get_tuner",

@@ -49,12 +49,14 @@ import tempfile
 import threading
 from typing import Dict, Iterable, List, Optional
 
-SCHEMA = "repro-autotune-v4"
+SCHEMA = "repro-autotune-v5"
 # older cache files we still read (v1 entries lack the v2 tile fields,
 # v1/v2 keys lack the v3 |dev suffix == the devices=1 bucket, v1-v3 keys
-# lack the v4 |tr: suffix == the untruncated bucket)
+# lack the v4 |tr: suffix == the untruncated bucket, v1-v4 keys lack the
+# v5 |sp suffix == the dense-only-candidates bucket)
 COMPAT_SCHEMAS = (
-    "repro-autotune-v1", "repro-autotune-v2", "repro-autotune-v3", SCHEMA,
+    "repro-autotune-v1", "repro-autotune-v2", "repro-autotune-v3",
+    "repro-autotune-v4", SCHEMA,
 )
 BENCH_SCHEMA = "repro-autotune-bench-v1"
 
@@ -80,6 +82,7 @@ def _bucket(n: int) -> int:
 def bucket_key(
     backend: str, B: int, K: int, draws: int, dtype: str, has_key: bool = True,
     factored: bool = False, devices: int = 1, transforms: str = "",
+    sparse: bool = False,
 ) -> str:
     """Shape-bucket cache key.  ``has_key`` is part of the key: callers
     without a PRNG key have a smaller candidate set (no gumbel/alias), so
@@ -94,7 +97,11 @@ def bucket_key(
     for top-k -> top-p -> min-p): truncated decode admits the fused
     ``kernel_trunc`` candidate and pays threshold-search costs the plain
     draw doesn't, so it tunes in its own ``|tr:SIG`` bucket (no suffix ==
-    the untruncated bucket, so v1-v3 entries keep matching)."""
+    the untruncated bucket, so v1-v3 entries keep matching).
+    ``sparse`` (v5) marks an LDA z-draw that can run the sparsity-aware
+    MH sweep: the candidate set gains ``sparse_mh``, so the winner lands
+    in its own ``|sp`` bucket (no suffix == the dense-candidates bucket,
+    so v1-v4 entries keep matching)."""
     kd = "key" if has_key else "nokey"
     base = f"{backend}|B{_bucket(B)}|K{_bucket(K)}|d{_bucket(draws)}|{dtype}|{kd}"
     if factored:
@@ -103,6 +110,8 @@ def bucket_key(
         base += f"|dev{_bucket(devices)}"
     if transforms:
         base += f"|tr:{transforms}"
+    if sparse:
+        base += "|sp"
     return base
 
 
@@ -245,7 +254,7 @@ class TuningCache:
         # timing records cover both caller kinds: the key-less bucket only
         # considers methods a u-based caller can run; factored methods
         # only compete in the factored buckets (and vice versa)
-        from repro.autotune.cost_model import FACTORED_METHODS
+        from repro.autotune.cost_model import FACTORED_METHODS, SPARSE_METHODS
         from repro.autotune.tuner import KEY_METHODS, KNOWN_METHODS
 
         best: Dict[str, Dict] = {}
@@ -259,21 +268,33 @@ class TuningCache:
                 if r["method"] not in KNOWN_METHODS:
                     continue
                 us = float(r["us"])
-                factored = r["method"] in FACTORED_METHODS
+                is_sparse = r["method"] in SPARSE_METHODS
+                factored = r["method"] in FACTORED_METHODS or is_sparse
+                # sparse-only methods live solely in the |sp bucket; dense
+                # factored methods also compete there (a sparse-capable
+                # workload can always fall back to the dense path)
+                if is_sparse:
+                    sparse_opts = (True,)
+                elif factored:
+                    sparse_opts = (False, True)
+                else:
+                    sparse_opts = (False,)
                 for has_key in (True, False):
                     if not has_key and r["method"] in KEY_METHODS:
                         continue
-                    key = bucket_key(
-                        r.get("backend", "cpu"), r["B"], r["K"],
-                        r.get("draws", 1), r.get("dtype", "float32"),
-                        has_key=has_key, factored=factored,
-                        devices=int(r.get("devices", 1)),
-                        transforms=str(r.get("transforms", "")),
-                    )
-                    if key not in best or us < best[key]["us"]:
-                        best[key] = {"method": r["method"],
-                                     "W": int(r.get("W", 32)), "us": us,
-                                     "tb": r.get("tb"), "tk": r.get("tk")}
+                    for sp in sparse_opts:
+                        key = bucket_key(
+                            r.get("backend", "cpu"), r["B"], r["K"],
+                            r.get("draws", 1), r.get("dtype", "float32"),
+                            has_key=has_key, factored=factored,
+                            devices=int(r.get("devices", 1)),
+                            transforms=str(r.get("transforms", "")),
+                            sparse=sp,
+                        )
+                        if key not in best or us < best[key]["us"]:
+                            best[key] = {"method": r["method"],
+                                         "W": int(r.get("W", 32)), "us": us,
+                                         "tb": r.get("tb"), "tk": r.get("tk")}
             except (KeyError, TypeError, ValueError):
                 continue
         for key, rec in best.items():

@@ -119,6 +119,27 @@ FACTORED_METHODS = ("lda_kernel",)
 # write the flat row) before the method's own build reads it back
 FACTOR_MATERIALIZE_EQ = 2.0
 
+# sparse-LDA terms (DESIGN.md §10).  The MH-alias sweep's per-token cost
+# is sublinear in K: a couple of O(1) table gathers (or an O(log K)
+# branchless cdf descent) for the word proposal, a cap-wide masked
+# compare-reduce over the doc's live topics for the doc proposal, and
+# five counter-RNG uniforms per MH cycle.  Candidates only when the
+# workload is an LDA z-draw that can run the sparse sweep (tuner
+# ``sparse=True``).
+SPARSE_METHODS = ("sparse_mh",)
+# default live-topics-per-doc proxy when the caller doesn't know K_d:
+# the sweep's default capacity clamp (DEFAULT_CAP_MAX would overcount —
+# hysteresis keeps cap near the observed nnz max)
+SPARSE_KD_DEFAULT = 32.0
+# per-token fixed overhead of the MH machinery (chunk bookkeeping,
+# accept/reject, mask plumbing) in gather-line equivalents; fitted so the
+# dense/sparse crossover lands near K ~ 200 where the measured sweep
+# breaks even on CPU (BENCH_lda.json)
+SPARSE_MH_BASE_LINES = 10.0
+# fraction of a full gather line charged per cdf-descent level (scalar
+# gathers on a hot cumsum row, not cold cache lines)
+SPARSE_DESCENT_LINE = 0.7
+
 # truncated-decode terms (DESIGN.md §7).  Truncation is a per-row value
 # threshold found by bisection; viable strategies pay for that search.
 TRUNC_ITERS = 32
@@ -143,6 +164,8 @@ def method_cost_eq(
     backend: str = "cpu",
     factored: bool = False,
     truncated: bool = False,
+    sparse: bool = False,
+    kd: Optional[float] = None,
 ) -> float:
     """Effective bytes per row for one draw, with the table build amortized
     over ``draws`` uses of the same distribution.
@@ -163,6 +186,14 @@ def method_cost_eq(
     plus the masked rewrite; ``kernel_trunc`` folds the search into the
     fused draw's VMEM-resident tile and pays only the in-kernel compute
     equivalent.
+
+    ``sparse=True`` marks an LDA z-draw workload that can run the
+    MH-alias sweep; ``kd`` (optional) is the observed mean live topics
+    per document, tightening the sparse candidate's cap-reduce term.
+    ``sparse_mh`` is the only method whose per-row cost is sublinear in K
+    (log word-proposal descent + kd-wide reduce) — every dense method
+    grows ~linearly through its build term, which is the crossover the
+    tuner arbitrates.
     """
     bp = backend_params(backend)
     c = float(dtype_bytes)
@@ -171,6 +202,22 @@ def method_cost_eq(
     log2K = math.log2(max(K, 2))
     log2W = math.log2(max(W, 2))
 
+    if method == "sparse_mh":
+        if not sparse:
+            raise ValueError(
+                "sparse_mh is only viable on sparse-capable LDA workloads"
+            )
+        kd_eff = min(float(kd) if kd else SPARSE_KD_DEFAULT, float(K))
+        # per token per MH cycle: 5 counter-RNG uniforms, the fixed MH
+        # bookkeeping, a kd-wide masked compare-reduce (doc proposal),
+        # and a log2K cdf descent (word proposal).  No K-linear term —
+        # that is the whole point.
+        return (
+            5.0 * bp.rng_eq
+            + SPARSE_MH_BASE_LINES * LINE_EQ
+            + kd_eff * c
+            + log2K * SPARSE_DESCENT_LINE * LINE_EQ
+        )
     if method == "kernel_trunc":
         if not truncated:
             raise ValueError(
@@ -244,12 +291,14 @@ def predict_us(
     backend: str = "cpu",
     factored: bool = False,
     truncated: bool = False,
+    sparse: bool = False,
+    kd: Optional[float] = None,
 ) -> float:
     """Predicted microseconds for one (B, K) draw batch."""
     bp = backend_params(backend)
     eq = method_cost_eq(
         method, K, W=W, draws=draws, dtype_bytes=dtype_bytes, backend=backend,
-        factored=factored, truncated=truncated,
+        factored=factored, truncated=truncated, sparse=sparse, kd=kd,
     )
     return bp.launch_us + B * eq / (bp.bandwidth_gbps * 1e3)
 
@@ -264,6 +313,8 @@ def rank_methods(
     backend: str = "cpu",
     factored: bool = False,
     truncated: bool = False,
+    sparse: bool = False,
+    kd: Optional[float] = None,
 ) -> List[Tuple[float, str, int]]:
     """Sort candidate methods by predicted cost: [(us, method, W), ...]."""
     W = default_w(K)
@@ -271,7 +322,7 @@ def rank_methods(
         (
             predict_us(m, B, K, W=W, draws=draws, dtype_bytes=dtype_bytes,
                        backend=backend, factored=factored,
-                       truncated=truncated),
+                       truncated=truncated, sparse=sparse, kd=kd),
             m,
             W,
         )
@@ -291,10 +342,12 @@ def choose(
     backend: str = "cpu",
     factored: bool = False,
     truncated: bool = False,
+    sparse: bool = False,
+    kd: Optional[float] = None,
 ) -> Tuple[str, int, float]:
     """Best (method, W, predicted_us) among ``candidates``."""
     us, method, W = rank_methods(
         candidates, B, K, draws=draws, dtype_bytes=dtype_bytes, backend=backend,
-        factored=factored, truncated=truncated,
+        factored=factored, truncated=truncated, sparse=sparse, kd=kd,
     )[0]
     return method, W, us

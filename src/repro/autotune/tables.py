@@ -34,7 +34,7 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-BUILDERS = ("alias", "fenwick")
+BUILDERS = ("alias", "alias_host", "fenwick")
 
 
 def _is_tracer(x) -> bool:
@@ -90,6 +90,14 @@ def _build(kind: str, weights, W: Optional[int]):
     W = W or _bfly.DEFAULT_W
     if kind == "alias":
         return _alias.build_alias_tables(weights)
+    # host-side numpy Vose twin: O(BK) instead of the vmapped while_loop's
+    # O(BK^2) — the sparse-LDA per-sweep phi tables go through this kind.
+    # Tracer weights fall back to the jittable builder (no host build
+    # exists inside a trace).
+    if kind == "alias_host":
+        if _is_tracer(weights):
+            return _alias.build_alias_tables(weights)
+        return _alias.build_alias_tables_host(weights)
     # _prep is the uncached draw paths' dtype normalization + padding —
     # sharing it keeps cached tables bit-identical to per-call builds
     if kind == "fenwick":

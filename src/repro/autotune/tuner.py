@@ -48,7 +48,7 @@ KEY_METHODS = ("gumbel", "alias")
 # every strategy any resolver can ever return — the ingest whitelist
 # (bench files also carry non-runnable comparison pseudo-rows)
 KNOWN_METHODS = U_METHODS + KEY_METHODS + (
-    "kernel", "kernel_trunc", "lda_kernel",
+    "kernel", "kernel_trunc", "lda_kernel", "sparse_mh",
 )
 
 MODES = ("measure", "model", "off")
@@ -90,7 +90,7 @@ def _tracing_active() -> bool:
 
 def candidate_methods(
     B: int, K: int, backend: str, has_key: bool, factored: bool = False,
-    transforms: str = "",
+    transforms: str = "", sparse: bool = False,
 ) -> Tuple[str, ...]:
     """All viable strategies for this workload: core u-based methods,
     key-based methods when a key is available, plus whatever the kernels
@@ -98,7 +98,8 @@ def candidate_methods(
     weights arrive as a theta-phi product — the LDA z-draw) additionally
     admits the fused factored kernels; a non-empty ``transforms``
     signature (a truncated-decode workload) admits the fused truncated
-    variants (``kernel_trunc``)."""
+    variants (``kernel_trunc``); ``sparse=True`` (the LDA sweep can hold
+    sparse doc-topic counts) admits the MH sweep (``sparse_mh``)."""
     from repro import kernels
 
     cands = list(U_METHODS)
@@ -106,7 +107,8 @@ def candidate_methods(
         cands.extend(KEY_METHODS)
     cands.extend(
         kernels.candidates(
-            B, K, backend, factored=factored, truncated=bool(transforms)
+            B, K, backend, factored=factored, truncated=bool(transforms),
+            sparse=sparse,
         )
     )
     return tuple(dict.fromkeys(cands))  # dedupe, keep order
@@ -124,6 +126,7 @@ def measure_method(
     seed: int = 0,
     factored: bool = False,
     truncated: bool = False,
+    sparse: bool = False,
 ) -> Optional[float]:
     """Median wall-clock microseconds of one jitted (B, K) draw batch on
     synthetic weights; ``None`` if the method fails on this shape.
@@ -163,6 +166,14 @@ def measure_method(
         words = jnp.asarray(rng.integers(0, V, size=(B,)), jnp.int32)
 
     try:
+        if method == "sparse_mh":
+            if not sparse:
+                return None
+            from repro.lda import sparse as _sparse
+
+            return _sparse.measure_sparse_mh(
+                B, K, iters=iters, warmup=warmup, seed=seed
+            )
         if method == "kernel_trunc":
             if not truncated:
                 return None
@@ -277,13 +288,15 @@ class Tuner:
         factored: bool = False,
         devices: int = 1,
         transforms: str = "",
+        sparse: bool = False,
+        kd: Optional[float] = None,
         candidates: Optional[Sequence[str]] = None,
     ) -> Tuple[str, int]:
         """Back-compat (method, W) resolution; see :meth:`resolve_full`."""
         return self.resolve_full(
             B, K, draws=draws, dtype_name=dtype_name, has_key=has_key,
             factored=factored, devices=devices, transforms=transforms,
-            candidates=candidates,
+            sparse=sparse, kd=kd, candidates=candidates,
         ).pair()
 
     def resolve_full(
@@ -297,6 +310,8 @@ class Tuner:
         factored: bool = False,
         devices: int = 1,
         transforms: str = "",
+        sparse: bool = False,
+        kd: Optional[float] = None,
         candidates: Optional[Sequence[str]] = None,
     ) -> Resolution:
         """Full resolution including the tiled-kernel ``tb``/``tk``
@@ -313,14 +328,20 @@ class Tuner:
         truncated-decode workload: the fused truncated kernel joins the
         candidate set, every candidate is costed *including* its
         threshold-search surcharge, and the winner lands in the
-        signature's own v4 cache bucket."""
+        signature's own v4 cache bucket.
+
+        ``sparse=True`` marks an LDA z-draw whose sweep can hold sparse
+        doc-topic counts: the MH sweep (``sparse_mh``) joins the
+        candidate set — the only method sublinear in K — and the winner
+        lands in the workload's own v5 ``|sp`` bucket.  ``kd`` (optional,
+        model mode only) is the observed mean live topics per doc."""
         backend = self.backend
         cands = tuple(
             candidates
             if candidates is not None
             else candidate_methods(
                 B, K, backend, has_key, factored=factored,
-                transforms=transforms,
+                transforms=transforms, sparse=sparse,
             )
         )
         mode = self.mode
@@ -328,6 +349,7 @@ class Tuner:
         key = bucket_key(
             backend, B, K, draws, dtype_name, has_key=has_key,
             factored=factored, devices=devices, transforms=transforms,
+            sparse=sparse,
         )
 
         if mode != "off":
@@ -347,13 +369,14 @@ class Tuner:
         if mode == "measure" and not _tracing_active():
             method, W, us = self._tune(
                 cands, B, K, draws, dtype_name, dtype_bytes, backend,
-                factored=factored, truncated=truncated,
+                factored=factored, truncated=truncated, sparse=sparse,
             )
             source = "measured"
         else:
             method, W, us = cost_model.choose(
                 cands, B, K, draws=draws, dtype_bytes=dtype_bytes,
                 backend=backend, factored=factored, truncated=truncated,
+                sparse=sparse, kd=kd,
             )
             source = "model"
         tb, tk = cost_model.default_tiles(B, K, W)
@@ -363,7 +386,7 @@ class Tuner:
         return Resolution(method=method, W=W, tb=tb, tk=tk, source=source)
 
     def _tune(self, cands, B, K, draws, dtype_name, dtype_bytes, backend,
-              factored=False, truncated=False):
+              factored=False, truncated=False, sparse=False):
         """Time every candidate at the bucket's representative shape (the
         blocked methods at a small W sweep around the model's guess); fall
         back to the cost model if everything fails (e.g. OOM shapes)."""
@@ -378,7 +401,8 @@ class Tuner:
             ws = sorted({w_guess, 32}) if method in blocked else (w_guess,)
             for W in ws:
                 us = measure_method(method, B, K, W, dtype=dtype,
-                                    factored=factored, truncated=truncated)
+                                    factored=factored, truncated=truncated,
+                                    sparse=sparse)
                 if us is None:
                     continue
                 if draws > 1 and method in cost_model.CACHED_TABLE_METHODS:
@@ -397,6 +421,7 @@ class Tuner:
             method, W, us = cost_model.choose(
                 cands, B, K, draws=draws, dtype_bytes=dtype_bytes,
                 backend=backend, factored=factored, truncated=truncated,
+                sparse=sparse,
             )
             return method, W, us
         us, method, W = best

@@ -87,6 +87,72 @@ def build_alias_table(weights: jnp.ndarray) -> AliasTable:
 build_alias_tables = jax.vmap(build_alias_table)  # over a (B, K) batch
 
 
+def build_alias_tables_host(weights) -> AliasTable:
+    """Row-vectorized host-side (numpy) Vose build over a (B, K) batch.
+
+    The jittable ``build_alias_tables`` above is a vmapped
+    ``lax.while_loop`` — XLA cannot keep its per-row stacks in place under
+    vmap, so each of the ~K pair steps copies the whole (B, 2K) state:
+    O(B*K^2) wall time (15s+ at vocab scale on CPU).  This twin runs the
+    same Vose pairing with numpy fancy indexing, advancing every row one
+    (small, large) pair per python iteration: O(B*K) total work, ~20x
+    faster at (2048, 512), bit-agreeing draw semantics (leftover entries
+    on either stack keep prob 1).  Weights must be concrete (it is a host
+    build); the sparse-LDA sweep reaches it through the
+    ``autotune.tables`` LRU cache so per-phi builds amortize across draw
+    calls."""
+    import numpy as np
+
+    w = np.asarray(jax.device_get(weights), np.float64)
+    if w.ndim != 2:
+        raise ValueError(f"expected (B, K) weights, got shape {w.shape}")
+    V, K = w.shape
+    tot = w.sum(axis=1, keepdims=True)
+    ok = (tot > 0).ravel()
+    s = np.where(tot > 0, w * (K / np.where(tot > 0, tot, 1.0)), 1.0)
+    prob = np.ones((V, K), np.float64)
+    alias = np.tile(np.arange(K, dtype=np.int32), (V, 1))
+    idx = np.tile(np.arange(K, dtype=np.int32), (V, 1))
+    small_mask = s < 1.0
+    # per-row worklists as stable argsorts: small entries first / large
+    # entries first; the small stack is padded to 2K for demotions
+    small_stack = np.argsort(
+        np.where(small_mask, idx, K + idx), axis=1, kind="stable"
+    ).astype(np.int32)
+    large_stack = np.argsort(
+        np.where(~small_mask, idx, K + idx), axis=1, kind="stable"
+    ).astype(np.int32)
+    n_small = small_mask.sum(axis=1).astype(np.int64)
+    n_large = K - n_small
+    small_stack = np.concatenate(
+        [small_stack, np.zeros((V, K), np.int32)], axis=1
+    )
+    si = np.zeros(V, np.int64)
+    li = np.zeros(V, np.int64)
+    rows = np.arange(V)
+    while True:
+        active = (si < n_small) & (li < n_large) & ok
+        if not active.any():
+            break
+        r = rows[active]
+        sidx = small_stack[r, si[active]]
+        lidx = large_stack[r, li[active]]
+        ps = s[r, sidx]
+        prob[r, sidx] = ps
+        alias[r, sidx] = lidx
+        leftover = s[r, lidx] - (1.0 - ps)
+        s[r, lidx] = leftover
+        demote = leftover < 1.0
+        tails = n_small[active]
+        small_stack[r[demote], tails[demote]] = lidx[demote]
+        n_small[active] += demote.astype(np.int64)
+        li[active] += demote.astype(np.int64)
+        si[active] += 1
+    return AliasTable(
+        prob=jnp.asarray(prob.astype(np.float32)), alias=jnp.asarray(alias)
+    )
+
+
 def draw_alias(table: AliasTable, key: jax.Array, shape=()) -> jnp.ndarray:
     """O(1) draws from a single prebuilt table."""
     K = table.prob.shape[0]

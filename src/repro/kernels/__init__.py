@@ -31,6 +31,10 @@ class KernelCandidate:
     # truncated candidates fold a top-k/top-p/min-p threshold pass into
     # the draw — only offered when the caller declares a truncation chain
     truncated: bool = False
+    # sparse candidates run the sparsity-aware MH sweep over per-doc live
+    # topics — only offered when the caller's workload is an LDA z-draw
+    # that can supply sparse doc-topic counts (sparse=True)
+    sparse: bool = False
 
 
 _REGISTRY: Tuple[KernelCandidate, ...] = (
@@ -61,18 +65,33 @@ _REGISTRY: Tuple[KernelCandidate, ...] = (
         description="fused factored theta-phi draw (weights never materialize)",
         factored=True,
     ),
+    KernelCandidate(
+        method="sparse_mh",
+        module="repro.lda.sparse",
+        # pure-XLA scan (token-major compare-reduces + scalar gathers):
+        # viable on every backend; sublinear per-token cost in K
+        available=lambda B, K, backend: K >= 2,
+        description=(
+            "sparsity-aware MH-alias Gibbs sweep (WarpLDA proposals over "
+            "fixed-width sparse doc-topic counts — no (B, K) weights)"
+        ),
+        factored=True,
+        sparse=True,
+    ),
 )
 
 
 def candidates(
     B: int, K: int, backend: Optional[str] = None, factored: bool = False,
-    truncated: bool = False,
+    truncated: bool = False, sparse: bool = False,
 ) -> Tuple[str, ...]:
     """Kernel-backed method names viable for a (B, K) draw on ``backend``
     (default: the current JAX backend).  ``factored=True`` adds the
     strategies that consume a (theta, phi) factorization directly;
     ``truncated=True`` adds the fused truncated-decode strategies (the
-    workload declares a top-k/top-p/min-p chain)."""
+    workload declares a top-k/top-p/min-p chain); ``sparse=True`` adds
+    the sparsity-aware LDA sweep strategies (the workload can supply
+    per-doc sparse topic counts)."""
     if backend is None:
         import jax
 
@@ -82,6 +101,7 @@ def candidates(
         if c.available(B, K, backend)
         and (factored or not c.factored)
         and (truncated or not c.truncated)
+        and (sparse or not c.sparse)
     )
 
 

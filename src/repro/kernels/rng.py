@@ -51,6 +51,7 @@ TAG_U = 1          # u-driven variants' per-(row, draw) uniform
 TAG_GUMBEL = 2     # per-(row, category) Gumbel noise
 TAG_ALIAS_J = 3    # alias draw: column pick
 TAG_ALIAS_A = 4    # alias draw: accept coordinate
+TAG_SPARSE_MH = 5  # sparse LDA MH-alias sweep: per-(token, use) uniforms
 
 
 def _rotl(x, r: int):

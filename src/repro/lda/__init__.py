@@ -9,6 +9,13 @@ and the word-topic matrix ``phi``.
 from repro.lda.corpus import Corpus, paper_corpus_stats, synthesize_corpus
 from repro.lda.gibbs import LDAState, gibbs_step, init_state, log_likelihood, perplexity
 from repro.lda.metrics import topic_recovery_score
+from repro.lda.sparse import (
+    SparseSweepCache,
+    StreamingSparseLDA,
+    draw_z_sparse,
+    gibbs_step_sparse,
+    sparse_counts,
+)
 
 __all__ = [
     "Corpus",
@@ -20,4 +27,9 @@ __all__ = [
     "log_likelihood",
     "perplexity",
     "topic_recovery_score",
+    "SparseSweepCache",
+    "StreamingSparseLDA",
+    "draw_z_sparse",
+    "gibbs_step_sparse",
+    "sparse_counts",
 ]

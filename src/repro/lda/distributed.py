@@ -49,9 +49,19 @@ def _doc_sharded(mesh):
 
 def make_sharded_gibbs(mesh, K: int, V: int, alpha: float = 0.1,
                        beta: float = 0.05, method: str = "auto",
-                       W: Optional[int] = None):
+                       W: Optional[int] = None, sparse: bool = False,
+                       cap: int = 32, mh_steps: int = 1):
     """Returns (place, step): ``place`` shards an LDAState + docs onto the
-    mesh; ``step`` is the jitted shard_map'd sweep described above."""
+    mesh; ``step`` is the jitted shard_map'd sweep described above.
+
+    ``sparse=True`` replaces the dense z-draw with the sparsity-aware MH
+    sweep (:mod:`repro.lda.sparse`): each shard builds its fixed-width
+    sparse doc-topic counts (static ``cap``, no retraces) from its own
+    incoming z, proposes through the in-graph cdf word tables (the host
+    alias builder cannot run inside ``shard_map``; the cdf build is one
+    replicated O(VK) cumsum), and walks ``mh_steps`` MH cycles with
+    *global* doc offsets — the counter RNG stays device-count invariant,
+    and the sweep's only collective is still the single word-topic psum."""
     row = _doc_sharded(mesh)
     rep = NamedSharding(mesh, P())
     rs = row_spec(mesh)
@@ -72,36 +82,64 @@ def make_sharded_gibbs(mesh, K: int, V: int, alpha: float = 0.1,
         )
 
     def shard_step(theta, phi, z_old, key, step, docs, mask):
-        del z_old                      # replaced wholesale by this sweep
         C, N = docs.shape              # per-shard documents
         B = C * N
         kz, k_theta, k_phi, k_next = jax.random.split(key, 4)
 
-        # -- z-draw: factored plan per shard, counter RNG, no collectives
-        p = sampling.plan(
-            (B, K), method=method, W=W, dtype=str(theta.dtype),
-            has_key=False, factored=True, devices=nd,
-        )
-        words = docs.reshape(-1)
-        doc_ids = jnp.arange(B, dtype=jnp.int32) // N
-        row0 = _linear_index(mesh) * B          # first global word position
-        seed = _rng.seed_from_key(kz)
-        if p.method in sampling.FACTORED_VARIANTS:
-            from repro.kernels.lda_draw import lda_draw_factored_rng
+        if sparse:
+            # -- sparse MH z-draw: fixed-width sparse counts from the
+            # incoming z, cdf word tables built in-graph, global doc
+            # offsets keep the counter RNG topology-invariant.  Still
+            # zero collectives in the draw.
+            from repro.lda import sparse as _sparse
 
-            idx = lda_draw_factored_rng(
-                theta, phi, doc_ids, words, seed, row_offset=row0,
-                W=p.W, tb=p.tb or 8,
+            cap_eff = min(cap, K)
+            doc_topic0, _ = _sparse._counts_scatter(z_old, docs, mask, K, V)
+            counts = _sparse.sparse_counts(doc_topic0, cap_eff)
+            tbl_a = _sparse._phi_cdf(phi)
+            tbl_b = jnp.zeros((1, 1), jnp.int32)
+            seed = _rng.fold(_rng.seed_from_key(kz), _rng.TAG_SPARSE_MH)
+            d0 = _linear_index(mesh) * C        # first global document
+            z, _, _, _ = _sparse._mh_sweep(
+                z_old, docs, mask, theta, phi, counts.ids, counts.cnt,
+                tbl_a, tbl_b, seed, jnp.uint32(d0), jnp.float32(alpha),
+                steps=mh_steps, cap=cap_eff, mode="cdf", chunk=min(256, C),
             )
         else:
-            dist = p.build_from_factors(theta, phi, words, doc_ids)
-            u = _rng.row_uniforms(_rng.fold(seed, _rng.TAG_U, 0), row0, B)
-            idx = p.draw(dist, u=u)
-        z = idx.reshape(C, N)
+            del z_old                  # replaced wholesale by this sweep
+            # -- z-draw: factored plan per shard, counter RNG, no
+            # collectives
+            p = sampling.plan(
+                (B, K), method=method, W=W, dtype=str(theta.dtype),
+                has_key=False, factored=True, devices=nd,
+            )
+            words = docs.reshape(-1)
+            doc_ids = jnp.arange(B, dtype=jnp.int32) // N
+            row0 = _linear_index(mesh) * B      # first global word position
+            seed = _rng.seed_from_key(kz)
+            if p.method in sampling.FACTORED_VARIANTS:
+                from repro.kernels.lda_draw import lda_draw_factored_rng
+
+                idx = lda_draw_factored_rng(
+                    theta, phi, doc_ids, words, seed, row_offset=row0,
+                    W=p.W, tb=p.tb or 8,
+                )
+            else:
+                dist = p.build_from_factors(theta, phi, words, doc_ids)
+                u = _rng.row_uniforms(_rng.fold(seed, _rng.TAG_U, 0), row0, B)
+                idx = p.draw(dist, u=u)
+            z = idx.reshape(C, N)
 
         # -- counts: doc-topic local, word-topic all-reduced (AD-LDA's
         # one required synchronization)
-        doc_topic, word_topic = _counts(z, docs, mask, K, V)
+        if sparse:
+            from repro.lda import sparse as _sparse
+
+            doc_topic, word_topic = _sparse._counts_scatter(
+                z, docs, mask, K, V
+            )
+        else:
+            doc_topic, word_topic = _counts(z, docs, mask, K, V)
         word_topic = jax.lax.psum(word_topic, axes)
 
         # -- resample: theta per shard (folded key — shards must not share

@@ -303,6 +303,10 @@ def gibbs_step(
     W: int = None,
     chunk: int = 256,
     dists: Optional[Dict[int, sampling.Categorical]] = None,
+    sparse=False,
+    sparse_cache=None,
+    mh_steps: int = 2,
+    word_proposal: str = "cdf",
 ) -> LDAState:
     """One full uncollapsed Gibbs sweep.
 
@@ -310,7 +314,34 @@ def gibbs_step(
     resamples in one executable; old theta/z buffers donated off-CPU).
     Pass the same dict as ``dists=`` on every call to instead hold the
     per-chunk ``Categorical`` distributions across sweeps (refreshed each
-    sweep from the new theta/phi)."""
+    sweep from the new theta/phi).
+
+    ``sparse=True`` routes the sweep through ``repro.lda.sparse`` — the
+    sparsity-aware MH-alias z-draw whose per-token cost is sublinear in K
+    (same ``LDAState`` in/out, exact same target distribution).
+    ``sparse="auto"`` asks the autotuner to arbitrate dense vs sparse for
+    this (tokens, K) bucket.  Pass the same ``sparse_cache=``
+    (a ``repro.lda.sparse.SparseSweepCache``) on every call so the
+    fixed-width sparse doc-topic counts persist across sweeps;
+    ``mh_steps``/``word_proposal`` tune the MH chain (see
+    ``sparse.gibbs_step_sparse``)."""
+    if sparse:
+        from repro.lda import sparse as _sparse
+
+        use_sparse = True
+        if sparse == "auto":
+            from repro import autotune
+
+            meth, _ = autotune.resolve(
+                int(corpus.total_words), state.theta.shape[-1],
+                factored=True, sparse=True,
+            )
+            use_sparse = meth in autotune.SPARSE_METHODS
+        if use_sparse:
+            return _sparse.gibbs_step_sparse(
+                state, corpus, alpha=alpha, beta=beta, mh_steps=mh_steps,
+                word_proposal=word_proposal, cache=sparse_cache, chunk=chunk,
+            )
     docs = jnp.asarray(corpus.docs)
     mask = jnp.asarray(corpus.mask)
     K = state.theta.shape[-1]

@@ -630,8 +630,8 @@ class TestAutotuneV4:
 
     def test_v4_reader_roundtrips_v1_v2_v3(self, tmp_path):
         """The compat regression gate: v1 (no tiles), v2 (tiles), v3
-        (|dev buckets) files all load into a v4 cache, and a v4 save
-        re-reads byte-equivalently."""
+        (|dev buckets) files all load into a current-schema cache, and
+        a fresh save re-reads byte-equivalently."""
         from repro.autotune.cache import SCHEMA, TuningCache, bucket_key
 
         k_plain = bucket_key("cpu", 256, 1024, 1, "float32")
@@ -667,10 +667,10 @@ class TestAutotuneV4:
         assert cache.get(k_plain)["method"] == "two_level"
         assert "tb" not in cache.get(k_plain)
         assert cache.get(k_dev)["tb"] == 16
-        # round-trip through a v4 save
-        out = cache.save(str(tmp_path / "v4.json"))
+        # round-trip through a current-schema save
+        out = cache.save(str(tmp_path / "v5.json"))
         blob4 = json.loads(open(out).read())
-        assert blob4["schema"] == SCHEMA == "repro-autotune-v4"
+        assert blob4["schema"] == SCHEMA == "repro-autotune-v5"
         c4 = TuningCache(path=out)
         assert len(c4) == 3
         assert c4.get(k_dev) == cache.get(k_dev)
