@@ -222,7 +222,7 @@ def bench_scale(docs, vocab, topics, sweeps, sparse, iters=3, seed=0):
         # one MH cycle per row: the unit the dense draw is compared
         # against (mh_steps multiplies cost linearly; the sweep rows
         # above carry the training default end to end)
-        for mode in ("alias", "cdf"):
+        for mode in ("alias", "alias_device", "cdf"):
             t0 = time.perf_counter()
             tbl_a, tbl_b = lda_sparse.word_proposal_tables(s.phi, mode)
             jax.block_until_ready(tbl_a)
@@ -248,6 +248,133 @@ def bench_scale(docs, vocab, topics, sweeps, sparse, iters=3, seed=0):
                     f"({ratio:.2f}x)",
                     file=sys.stderr,
                 )
+
+        # training-regime rows (PR 9): phi is resampled EVERY sweep, so
+        # the word-proposal table is rebuilt every sweep and per-token
+        # time includes the build.  "auto" arbitrates by draws-per-
+        # refresh (tokens/V amortization, DESIGN.md §11) — the gate is
+        # that the auto winner's build+sweep beats the cdf baseline.
+        resolved = lda_sparse.resolve_word_proposal(
+            "auto", K, V, tokens=int(tokens)
+        )
+        train_us = {}
+        for mode in dict.fromkeys(("cdf", resolved)):
+            fn = lda_sparse._mh_sweep_jit(1, cap, mode, 256)
+            # distinct phi per iteration defeats the digest-keyed table
+            # LRU — each build is a real rebuild, as in training
+            phis = [s.phi * (1.0 + 1e-6 * i) for i in range(iters + 1)]
+            for ph in phis:
+                jax.block_until_ready(ph)
+
+            def one_sweep(ph):
+                ta, tb = lda_sparse.word_proposal_tables(ph, mode)
+                return fn(s.z, docs_j, mask_j, s.theta, ph,
+                          counts.ids, counts.cnt, ta, tb, seed,
+                          jnp.uint32(0), jnp.float32(0.1))
+
+            jax.block_until_ready(one_sweep(phis[0]))  # compile
+            times = []
+            for ph in phis[1:]:
+                t0 = time.perf_counter()
+                jax.block_until_ready(one_sweep(ph))
+                times.append(time.perf_counter() - t0)
+            t_train = float(np.median(times))
+            train_us[mode] = t_train
+            records.append(
+                _row(f"lda_sparse_train_{mode}", tokens, K, t_train,
+                     dict(cap=cap, resolved_auto=resolved,
+                          build_included=True))
+            )
+        if resolved != "cdf":
+            print(
+                f"# K={K} train (build+sweep): cdf "
+                f"{train_us['cdf']*1e3:.1f} ms, auto->{resolved} "
+                f"{train_us[resolved]*1e3:.1f} ms "
+                f"({train_us['cdf']/train_us[resolved]:.2f}x)",
+                file=sys.stderr,
+            )
+    return records
+
+
+def bench_train(docs, vocab, topics, iters=3, mh_steps=4, seed=0):
+    """Training-regime rows at a scale where the device build amortizes.
+
+    Unlike :func:`bench_scale` this skips the dense sweep entirely: at
+    the token counts where alias_device pays for its per-sweep table
+    rebuild (draws-per-refresh d = tokens*mh/V above the ~2K CPU
+    crossover, DESIGN.md §11) a dense K-wide sweep would take minutes
+    and gates nothing.  Each timed sweep rebuilds the word-proposal
+    table from a fresh phi — the honest training cost — and "auto" must
+    pick the winner on its own.
+    """
+    corpus = synthesize_corpus(
+        seed, M=docs, V=vocab, K=min(topics, 64), avg_len=96, max_len=384,
+        zipf_exponent=1.05, doc_concentration=0.1,
+    )
+    tokens = corpus.total_words
+    K = topics
+    V = corpus.vocab_size
+    print(
+        f"# train corpus: {docs} docs, V={V}, K={K}, {tokens} tokens, "
+        f"mh_steps={mh_steps}",
+        file=sys.stderr,
+    )
+    state = init_state(jax.random.PRNGKey(seed), corpus, K)
+    cache = lda_sparse.SparseSweepCache()
+    s = gibbs_step(state, corpus, sparse=True, sparse_cache=cache,
+                   mh_steps=1, word_proposal="cdf")
+    jax.block_until_ready(s.theta)
+
+    from repro.kernels import rng as _rng
+
+    docs_j = jnp.asarray(corpus.docs)
+    mask_j = jnp.asarray(corpus.mask)
+    cap = min(cache.cap or 32, K)
+    doc_topic, _ = lda_sparse._counts_scatter(s.z, docs_j, mask_j, K, V)
+    counts = lda_sparse.sparse_counts(doc_topic, cap)
+    seed_u = _rng.fold(_rng.seed_from_key(s.key), _rng.TAG_SPARSE_MH)
+
+    eff = int(tokens) * mh_steps  # proposals per table refresh
+    resolved = lda_sparse.resolve_word_proposal("auto", K, V, tokens=eff)
+    records = []
+    train_t = {}
+    for mode in dict.fromkeys(("cdf", resolved)):
+        fn = lda_sparse._mh_sweep_jit(mh_steps, cap, mode, 256)
+        # distinct phi per iteration defeats the digest-keyed table LRU
+        phis = [s.phi * (1.0 + 1e-6 * i) for i in range(iters + 1)]
+        for ph in phis:
+            jax.block_until_ready(ph)
+
+        def one_sweep(ph):
+            ta, tb = lda_sparse.word_proposal_tables(ph, mode)
+            return fn(s.z, docs_j, mask_j, s.theta, ph,
+                      counts.ids, counts.cnt, ta, tb, seed_u,
+                      jnp.uint32(0), jnp.float32(0.1))
+
+        jax.block_until_ready(one_sweep(phis[0]))  # compile
+        times = []
+        for ph in phis[1:]:
+            t0 = time.perf_counter()
+            jax.block_until_ready(one_sweep(ph))
+            times.append(time.perf_counter() - t0)
+        t_train = float(np.median(times))
+        train_t[mode] = t_train
+        records.append(
+            _row(f"lda_train_{mode}_mh{mh_steps}", tokens, K, t_train,
+                 dict(cap=cap, resolved_auto=resolved, mh_steps=mh_steps,
+                      vocab=V, build_included=True))
+        )
+        print(
+            f"# train {mode}: {t_train*1e3:.1f} ms/sweep "
+            f"({t_train*1e9/max(tokens, 1):.0f} ns/token, build included)",
+            file=sys.stderr,
+        )
+    if resolved != "cdf" and resolved in train_t:
+        ratio = train_t["cdf"] / train_t[resolved]
+        print(
+            f"# K={K} training sweep: auto->{resolved} {ratio:.2f}x vs cdf",
+            file=sys.stderr,
+        )
     return records
 
 
@@ -292,17 +419,27 @@ def main(argv=None):
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--stream", action="store_true",
                     help="run the host-streamed sweep instead (million-doc)")
+    ap.add_argument("--train", action="store_true",
+                    help="training-regime rows only (phi rebuilt per sweep, "
+                         "no dense baseline)")
+    ap.add_argument("--mh-steps", type=int, default=4,
+                    help="MH proposals per token in --train mode")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write BENCH_lda.json-style records here")
     args = ap.parse_args(argv)
 
-    if args.docs is None and not args.stream:
+    if args.docs is None and not (args.stream or args.train):
         legacy_main()
         return 0
 
     records = []
     for K in (int(k) for k in str(args.topics).split(",")):
-        if args.stream:
+        if args.train:
+            records.extend(
+                bench_train(args.docs or 16384, args.vocab, K,
+                            args.iters, args.mh_steps)
+            )
+        elif args.stream:
             records.extend(
                 bench_stream(args.docs or 100_000, args.vocab, K, args.sweeps)
             )

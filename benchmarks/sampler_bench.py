@@ -265,8 +265,58 @@ def run_reuse(B=4096, K=4096, W=32, draws=16):
     return rows
 
 
+def run_zoo(B=1024, Ks=(256, 1024, 4096), iters=5):
+    """Frozen-distribution strategy-zoo rows (DESIGN.md §11): the
+    merged-rank on-device alias build, its O(1) draw, the radix-forest
+    draw, and the device-build vs host-build+ingest comparison the
+    acceptance gate tracks — the host figure is what ``alias`` pays on
+    every refresh (numpy Vose pack + table transfer + sync), the device
+    figure is the closed-jaxpr rebuild ``alias_device`` runs in-graph."""
+    from repro import sampling
+    from repro.core import alias as _alias
+    from repro.kernels.alias_build import build_alias_tables_device
+
+    rows = []
+    rng = np.random.default_rng(4)
+    key = jax.random.PRNGKey(0)
+    for K in Ks:
+        w = jnp.array(rng.uniform(0.1, 1.0, (B, K)).astype(np.float32))
+        build_dev = jax.jit(build_alias_tables_device)
+        t_dev = _bench(build_dev, w, iters=iters)
+        w_host = np.asarray(w)
+
+        def host_build():
+            t = _alias.build_alias_tables_host(w_host)
+            return (t.prob, t.alias)
+
+        t_host = _bench(host_build, iters=max(2, iters // 2))
+        row = dict(
+            B=B, K=K, method="alias_device_build", us=t_dev * 1e6,
+            host_build_us=t_host * 1e6,
+            build_speedup_vs_host=t_host / t_dev,
+        )
+        if t_host / t_dev < 2.0 and K >= 1024:
+            row["note"] = (
+                "device build under 2x vs host here: XLA CPU gather "
+                "throughput bounds the bisection passes on this host; "
+                "the device build remains the only in-graph option "
+                "(refresh inside jit/shard_map)"
+            )
+        rows.append(row)
+        for method in ("alias_device", "radix_forest"):
+            p = sampling.plan((B, K), method=method, draws=16)
+            dist = p.build(w)
+            jax.block_until_ready(dist.state)
+            t = _bench(lambda k: p.draw(dist, key=k), key, iters=iters)
+            rows.append(
+                dict(B=B, K=K, method=method, us=t * 1e6, draws_per_s=B / t)
+            )
+    return rows
+
+
 def write_json(rows, fused_rows=None, path: str = "BENCH_sampler.json",
-               W: int = 32, shard_rows=None, decode_rows=None) -> str:
+               W: int = 32, shard_rows=None, decode_rows=None,
+               zoo_rows=None) -> str:
     """Emit the rows as autotune-ingestible bench records.  Fused-vs-
     materializing rows land both in ``records`` (the fused timing, so the
     cache learns the factored winner) and, with their materializing
@@ -295,7 +345,8 @@ def write_json(rows, fused_rows=None, path: str = "BENCH_sampler.json",
         "records": [_rec(r, W, r["method"], r["us"]) for r in rows]
         + [_rec(r, W, r["method"], r["us"]) for r in (fused_rows or [])]
         + [_rec(r, W, r["method"], r["us"]) for r in (shard_rows or [])]
-        + [_rec(r, W, r["method"], r["us"]) for r in (decode_rows or [])],
+        + [_rec(r, W, r["method"], r["us"]) for r in (decode_rows or [])]
+        + [_rec(r, W, r["method"], r["us"]) for r in (zoo_rows or [])],
         "fused_factored": [
             {
                 "B": r["B"], "K": r["K"], "W": r["W"], "tb": r["tb"],
@@ -320,6 +371,10 @@ def write_json(rows, fused_rows=None, path: str = "BENCH_sampler.json",
             }
             for r in (decode_rows or [])
             if r["method"] == "trunc_fused"
+        ],
+        "strategy_zoo": [
+            {k: v for k, v in r.items()}
+            for r in (zoo_rows or [])
         ],
     }
     with open(path, "w") as f:
@@ -358,11 +413,14 @@ def main(argv=None):
     iters = 2 if args.quick else 5
     Ks = (256, 1024) if args.quick else (64, 256, 1024, 4096)
     Bs = (1024,) if args.quick else (4096,)
-    rows, fused_rows, decode_rows = [], [], []
+    rows, fused_rows, decode_rows, zoo_rows = [], [], [], []
     if not args.shard_only:
         rows = run(Bs=Bs, Ks=Ks, iters=iters)
         fused_rows = run_fused(Bs=Bs, Ks=tuple(k for k in Ks if k >= 256),
                                iters=iters)
+        # the strategy-zoo grid is fixed (the acceptance gate tracks
+        # K in {256, 1024, 4096}); --quick only trims iterations
+        zoo_rows = run_zoo(B=Bs[0], iters=iters)
     if args.decode and not args.shard_only:
         decode_rows = run_decode(
             Bs=(64,) if args.quick else (256,),
@@ -396,6 +454,18 @@ def main(argv=None):
             f"sorted_us={r['sorted_us']:.0f};speedup={r['speedup']:.2f}x;"
             f"resolved={r['resolved']}"
         )
+    for r in zoo_rows:
+        if r["method"] == "alias_device_build":
+            print(
+                f"zoo_build_B{r['B']}_K{r['K']},{r['us']:.0f},"
+                f"host_build_us={r['host_build_us']:.0f};"
+                f"vs_host={r['build_speedup_vs_host']:.2f}x"
+            )
+        else:
+            print(
+                f"zoo_{r['method']}_B{r['B']}_K{r['K']},{r['us']:.0f},"
+                f"draws_per_s={r['draws_per_s']:.3g}"
+            )
     if shard_rows:
         for r in shard_rows:
             print(
@@ -412,7 +482,7 @@ def main(argv=None):
             )
     if not args.no_json:
         path = write_json(rows, fused_rows, args.json, shard_rows=shard_rows,
-                          decode_rows=decode_rows)
+                          decode_rows=decode_rows, zoo_rows=zoo_rows)
         print(f"# wrote {path} ({BENCH_SCHEMA}; feed to autotune_bench --import)")
 
 

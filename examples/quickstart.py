@@ -32,6 +32,21 @@ for method in ("butterfly", "fenwick", "two_level", "prefix", "gumbel"):
     print(f"{method:10s} -> drew {idx.shape[0]} samples, "
           f"first five: {np.asarray(idx[:5])}")
 
+# -- frozen-distribution variants (DESIGN.md §11) --------------------------
+# tables built ON DEVICE: refresh stays in-graph (no host callback), draws
+# are O(1) (alias_device) or fixed-depth root-cached descent (radix_forest)
+for method in ("alias_device", "radix_forest"):
+    p = sampling.plan(weights.shape, method=method, draws=16)
+    dist = p.build(weights)              # merged-rank pack / radix forest
+    idx = p.draw(dist, key=key)
+    idx.block_until_ready()
+    print(f"{method:12s} -> drew {idx.shape[0]} samples, "
+          f"first five: {np.asarray(idx[:5])}")
+
+# what would autotune have picked for this draw-heavy frozen workload?
+auto = sampling.plan(weights.shape, method="auto", draws=16)
+print(f"auto (draws=16) resolved -> method={auto.table_method!r}")
+
 # multi-draw reuses the SAME tables: 8 draws per row in one fused call,
 # uniforms derived on device (zero table rebuilds — the paper's win)
 p = sampling.plan(weights.shape, method="fenwick", W=32, draws=8)

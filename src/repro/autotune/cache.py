@@ -49,14 +49,18 @@ import tempfile
 import threading
 from typing import Dict, Iterable, List, Optional
 
-SCHEMA = "repro-autotune-v5"
+SCHEMA = "repro-autotune-v6"
 # older cache files we still read (v1 entries lack the v2 tile fields,
 # v1/v2 keys lack the v3 |dev suffix == the devices=1 bucket, v1-v3 keys
 # lack the v4 |tr: suffix == the untruncated bucket, v1-v4 keys lack the
-# v5 |sp suffix == the dense-only-candidates bucket)
+# v5 |sp suffix == the dense-only-candidates bucket.  v6 adds no key
+# fields — it marks the strategy-zoo widening (alias_device /
+# radix_forest join the candidate sets), so v5-and-earlier winners stay
+# valid hits but a v6 writer's entries may name methods a v5 reader's
+# whitelist rejects)
 COMPAT_SCHEMAS = (
     "repro-autotune-v1", "repro-autotune-v2", "repro-autotune-v3",
-    "repro-autotune-v4", SCHEMA,
+    "repro-autotune-v4", "repro-autotune-v5", SCHEMA,
 )
 BENCH_SCHEMA = "repro-autotune-bench-v1"
 

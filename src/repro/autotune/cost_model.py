@@ -86,9 +86,11 @@ BUTTERFLY_ROUND_EQ = 1.0
 # fused-kernel discount: pass A/B share one dispatch and block sums stay
 # in VMEM on TPU
 KERNEL_FUSION = 0.7
-# the methods whose built tables repro.core.api reuses across calls when
-# the caller passes dist_key (see the table cache in repro.autotune.tables)
-CACHED_TABLE_METHODS = ("alias", "fenwick")
+# the methods whose built tables the sampling API actually reuses across
+# draws — via the dist_key table cache (repro.autotune.tables) or a held
+# frozen Categorical (plan().build() once, draw ``draws`` times) — so
+# their build term amortizes over draws-per-refresh
+CACHED_TABLE_METHODS = ("alias", "fenwick", "alias_device", "radix_forest")
 
 
 def default_w(K: int) -> int:
@@ -139,6 +141,22 @@ SPARSE_MH_BASE_LINES = 10.0
 # fraction of a full gather line charged per cdf-descent level (scalar
 # gathers on a hot cumsum row, not cold cache lines)
 SPARSE_DESCENT_LINE = 0.7
+
+# frozen-distribution strategy terms (DESIGN.md §11).  The device alias
+# build is all data-parallel primitives — cumsums, one scatter, and a
+# fixed log2K-trip bisection of gathers (NO sort: XLA's CPU sort is a
+# scalar comparator loop that would lose to the host builder) — so it
+# pays its ~(2 log2K + 4) passes at a streaming discount instead of the
+# backend's seq_penalty.  Fitted so the device build undercuts the
+# serial Vose build for every K below ~16k on CPU (and everywhere on
+# TPU), matching the measured >=2x win at K>=1024 (BENCH_sampler.json).
+ALIAS_DEVICE_PASS_DISCOUNT = 0.25
+# radix forest draw: the root gather is a cold line; the fixed-trip
+# bisection's gathers stay inside one root's span (cache-hot), charged a
+# fraction of a full line each
+RADIX_HOT_LINE = 0.4
+# root-table cap must mirror repro.core.radix.forest_bits
+RADIX_ROOT_CAP = 12
 
 # truncated-decode terms (DESIGN.md §7).  Truncation is a per-row value
 # threshold found by bisection; viable strategies pay for that search.
@@ -269,6 +287,20 @@ def method_cost_eq(
         # backend's serialization penalty.  Draws are O(1): two gathers.
         build = bp.seq_penalty * K * c
         draw = 2.0 * LINE_EQ + c
+    elif method == "alias_device":
+        # split-based parallel build: two argsort passes (partition +
+        # merged rank, ~log2K element touches each) plus a few streaming
+        # passes (scale, cumsum, assembly gathers) — all data-parallel,
+        # so no seq_penalty.  Draws are O(1) like alias: two gathers.
+        build = (2.0 * log2K + 4.0) * K * c * ALIAS_DEVICE_PASS_DISCOUNT
+        draw = 2.0 * LINE_EQ + c
+    elif method == "radix_forest":
+        # build is the cheapest table in the zoo: one cumsum + one
+        # searchsorted root pass (M ~ K roots, capped) — the
+        # refresh-often/draw-few end of the frozen-distribution trade
+        M = float(min(1 << max(1, math.ceil(log2K)), 1 << RADIX_ROOT_CAP))
+        build = 3.0 * K * c + M * c
+        draw = LINE_EQ + log2K * RADIX_HOT_LINE * LINE_EQ + c
     else:
         raise ValueError(f"cost model knows no method {method!r}")
     if factored:

@@ -29,12 +29,13 @@ from __future__ import annotations
 
 import collections
 import threading
+import weakref
 from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-BUILDERS = ("alias", "alias_host", "fenwick")
+BUILDERS = ("alias", "alias_host", "alias_device", "fenwick")
 
 
 def _is_tracer(x) -> bool:
@@ -64,6 +65,21 @@ def _digest_reductions(w):
     return jnp.sum(iv), jnp.sum(iv * (2 * pos + 1))
 
 
+# per-array digest memo: jax arrays are immutable, so the digest of one
+# *instance* never changes — memoizing by id() + a liveness weakref turns
+# the repeated plan/draw lookups on a frozen distribution from two O(BK)
+# device reductions + two scalar transfers each into a dict hit.  The
+# weakref callback evicts on free so a recycled id can never alias a dead
+# array's digest; the stored ref is also identity-checked on hit.
+_DIGEST_MEMO: dict = {}
+_DIGEST_LOCK = threading.Lock()
+
+
+def _digest_memo_stats() -> int:
+    with _DIGEST_LOCK:
+        return len(_DIGEST_MEMO)
+
+
 def content_digest(weights) -> Optional[str]:
     """Cheap content fingerprint of a weight matrix, or ``None`` for
     tracers (inside jit nothing concrete exists to digest).
@@ -73,13 +89,28 @@ def content_digest(weights) -> Optional[str]:
     host-side.  The checksums are exact integer arithmetic: a changed
     element always changes the digest (no float-rounding blind spots);
     only an adversarially constructed multi-element collision could slip
-    through."""
+    through.  Memoized per array *instance* (arrays are immutable):
+    repeated lookups on the same held matrix skip the reductions."""
     if _is_tracer(weights):
         return None
+    wid = id(weights)
+    with _DIGEST_LOCK:
+        hit = _DIGEST_MEMO.get(wid)
+        if hit is not None and hit[0]() is weights:
+            return hit[1]
     s1, s2 = _digest_reductions(weights)
-    return (
+    digest = (
         f"{tuple(weights.shape)}|{weights.dtype}|{int(s1):#x}|{int(s2):#x}"
     )
+    try:
+        ref = weakref.ref(
+            weights, lambda _r, k=wid: _DIGEST_MEMO.pop(k, None)
+        )
+    except TypeError:
+        return digest  # not weakref-able (e.g. plain numpy scalar types)
+    with _DIGEST_LOCK:
+        _DIGEST_MEMO[wid] = (ref, digest)
+    return digest
 
 
 def _build(kind: str, weights, W: Optional[int]):
@@ -98,6 +129,12 @@ def _build(kind: str, weights, W: Optional[int]):
         if _is_tracer(weights):
             return _alias.build_alias_tables(weights)
         return _alias.build_alias_tables_host(weights)
+    # on-device split-based build: a closed jaxpr, so it works for tracer
+    # weights too — in-graph callers just build (no caching inside jit)
+    if kind == "alias_device":
+        from repro.kernels.alias_build import build_alias_tables_device
+
+        return build_alias_tables_device(weights)
     # _prep is the uncached draw paths' dtype normalization + padding —
     # sharing it keeps cached tables bit-identical to per-call builds
     if kind == "fenwick":

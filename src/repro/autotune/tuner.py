@@ -42,9 +42,9 @@ from repro.autotune import cost_model
 from repro.autotune.cache import TuningCache, bucket_key
 
 # methods that draw from a precomputed uniform ``u`` — always candidates
-U_METHODS = ("prefix", "fenwick", "two_level", "butterfly")
+U_METHODS = ("prefix", "fenwick", "two_level", "butterfly", "radix_forest")
 # methods that need a PRNG key — candidates only when the caller has one
-KEY_METHODS = ("gumbel", "alias")
+KEY_METHODS = ("gumbel", "alias", "alias_device")
 # every strategy any resolver can ever return — the ingest whitelist
 # (bench files also carry non-runnable comparison pseudo-rows)
 KNOWN_METHODS = U_METHODS + KEY_METHODS + (
@@ -111,6 +111,11 @@ def candidate_methods(
             sparse=sparse,
         )
     )
+    # the kernels registry doesn't know about PRNG keys: drop any
+    # registry-contributed key-driven strategy (alias_device) for u-based
+    # callers — they could never run its draw
+    if not has_key:
+        cands = [c for c in cands if c not in KEY_METHODS]
     return tuple(dict.fromkeys(cands))  # dedupe, keep order
 
 

@@ -39,6 +39,10 @@ Methods:
   * ``prefix``    — Alg. 1/3 full prefix sums + searchsorted (baseline)
   * ``gumbel``    — Gumbel-max one-pass baseline
   * ``alias``     — Walker/Vose alias tables (related-work baseline)
+  * ``alias_device`` — split-based alias build on device (closed jaxpr,
+                    rebuildable inside jit; O(1) draws)
+  * ``radix_forest`` — radix-tree forest (cheap rebuild, fixed-depth
+                    divergence-free draw — Binder & Keller 2019)
 
 Factored workloads (weights as a theta-phi product — the LDA z-draw)
 have their own zero-materialization path: build with
@@ -63,13 +67,13 @@ import jax.numpy as jnp
 
 METHODS = (
     "auto", "butterfly", "fenwick", "two_level", "kernel", "prefix",
-    "gumbel", "alias",
+    "gumbel", "alias", "alias_device", "radix_forest",
 )
 
 # the variants whose built state the table cache memoizes under dist_key
 # (stays in sync with autotune.cost_model.CACHED_TABLE_METHODS: amortized
 # build cost must mean actual cross-call reuse)
-_CACHED_KINDS = ("alias", "fenwick")
+_CACHED_KINDS = ("alias", "fenwick", "alias_device", "radix_forest")
 
 
 def sample_categorical(
@@ -118,7 +122,7 @@ def sample_categorical(
         draws=eff_draws,
         has_key=has_key,
     )
-    if p.method in ("gumbel", "alias") and key is None:
+    if p.method in ("gumbel", "alias", "alias_device") and key is None:
         raise ValueError(f"{p.method} requires a PRNG key")
     if u is None and key is None:
         raise ValueError("need key or u")
@@ -128,7 +132,7 @@ def sample_categorical(
         dist = autotune.get_table_cache().get_or_build_dist(dist_key, p, weights)
     else:
         dist = p.build(weights)
-    if p.method in ("gumbel", "alias"):
+    if p.method in ("gumbel", "alias", "alias_device"):
         # key-driven variants consume PRNG state even when u was (also)
         # supplied — matching the pre-redesign dispatch order
         return p.draw(dist, key=key)

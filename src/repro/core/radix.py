@@ -1,0 +1,81 @@
+"""Radix-tree forest sampling (Binder & Keller, "Massively Parallel
+Construction of Radix Tree Forests", arXiv:1901.05423 — PAPERS.md).
+
+A forest of ``M = 2^m`` fixed-depth search trees over the normalized
+CDF: the top ``m`` bits of the uniform select a root (one gather), whose
+stored ``[root[t], root[t+1]]`` category range bounds the rest of the
+search; a fixed-trip clamped bisection inside that range finishes the
+draw.  Every lane executes the identical instruction sequence — no
+data-dependent trip counts, the divergence-free property radix forests
+are built for — and the residual bisection almost always collapses after
+``~log2(K) - m`` effective steps because a root's span is the number of
+categories inside one ``1/M``-wide slice of the CDF.
+
+Against the strategy zoo's other frozen-distribution structure (alias
+tables) the trade is build cost: a forest "build" is one cumsum plus a
+``searchsorted`` for the root table — no partition, no rank sort — so it
+wins when distributions refresh often but each is drawn from only a few
+times (DESIGN.md §11 has the amortization math).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def ceil_log2(n: int) -> int:
+    return max(1, int(math.ceil(math.log2(max(2, int(n))))))
+
+
+def forest_bits(K: int, cap: int = 12) -> int:
+    """Default tree count exponent: M ~ K roots (one expected category
+    per root), capped so the root table never dwarfs the CDF."""
+    return min(ceil_log2(K), cap)
+
+
+def build_radix_forest(weights, m: int | None = None):
+    """(B, K) non-negative weights -> ``(cdf, root)`` forest leaves.
+
+    ``cdf``  (B, K) float32 inclusive normalized prefix sums;
+    ``root`` (B, M+1) int32 — ``root[t]`` is the first category whose CDF
+    interval can contain a uniform in ``[t/M, (t+1)/M)``.  Zero-total
+    rows degrade to the uniform CDF (matching the alias builders'
+    zero-row semantics).  Pure traced ops — rebuildable in-graph."""
+    w = jnp.asarray(weights).astype(jnp.float32)
+    if w.ndim != 2:
+        raise ValueError(f"expected (B, K) weights, got shape {w.shape}")
+    B, K = w.shape
+    m = forest_bits(K) if m is None else int(m)
+    M = 1 << m
+    tot = jnp.sum(w, axis=-1, keepdims=True)
+    ok = tot > 0
+    uni = (jnp.arange(K, dtype=jnp.float32) + 1.0) / K
+    cdf = jnp.where(ok, jnp.cumsum(w, axis=-1) / jnp.where(ok, tot, 1.0), uni)
+    edges = jnp.arange(M + 1, dtype=jnp.float32) / M
+    root = jax.vmap(
+        lambda row: jnp.searchsorted(row, edges, side="right")
+    )(cdf)
+    return cdf, jnp.clip(root, 0, K - 1).astype(jnp.int32)
+
+
+def draw_radix_forest(cdf, root, u):
+    """One divergence-free draw per row: root dispatch on the top bits of
+    ``u``, then a fixed ``ceil(log2(K))``-trip clamped bisection (extra
+    trips past convergence are stable no-ops, so the worst-case span —
+    many tiny categories inside one slice — stays correct)."""
+    B, K = cdf.shape
+    M = root.shape[-1] - 1
+    u = u.astype(jnp.float32)
+    t = jnp.minimum((u * M).astype(jnp.int32), M - 1)
+    lo = jnp.take_along_axis(root, t[:, None], axis=-1)[:, 0]
+    hi = jnp.take_along_axis(root, t[:, None] + 1, axis=-1)[:, 0]
+    for _ in range(ceil_log2(K)):
+        mid = (lo + hi) >> 1
+        cm = jnp.take_along_axis(cdf, mid[:, None], axis=-1)[:, 0]
+        go = cm <= u
+        lo = jnp.where(go, mid + 1, lo)
+        hi = jnp.where(go, hi, mid)
+    return jnp.minimum(lo, K - 1).astype(jnp.int32)

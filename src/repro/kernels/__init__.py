@@ -66,6 +66,29 @@ _REGISTRY: Tuple[KernelCandidate, ...] = (
         factored=True,
     ),
     KernelCandidate(
+        method="alias_device",
+        module="repro.kernels.alias_build",
+        # viable everywhere: the Pallas assembly kernel on TPU, the
+        # pure-XLA merged-rank twin elsewhere (never interpret mode).
+        # O(1) draws once built — the frozen-distribution strategy.
+        available=lambda B, K, backend: K >= 2,
+        description=(
+            "on-device split-based alias build (closed-jaxpr PSA "
+            "construction) + O(1) two-uniform draws"
+        ),
+    ),
+    KernelCandidate(
+        method="radix_forest",
+        module="repro.core.radix",
+        # pure-XLA on every backend: cumsum + searchsorted build, fixed
+        # clamped bisection draw (divergence-free)
+        available=lambda B, K, backend: K >= 2,
+        description=(
+            "radix-tree forest draw (root dispatch on top uniform bits + "
+            "fixed-depth clamped bisection; cheap rebuild)"
+        ),
+    ),
+    KernelCandidate(
         method="sparse_mh",
         module="repro.lda.sparse",
         # pure-XLA scan (token-major compare-reduces + scalar gathers):

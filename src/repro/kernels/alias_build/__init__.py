@@ -1,0 +1,5 @@
+"""On-device alias table construction (split-based PSA build)."""
+
+from repro.kernels.alias_build.ops import build_alias_tables_device
+
+__all__ = ["build_alias_tables_device"]

@@ -34,6 +34,15 @@ Variants and their state leaves:
               — the (B, K) weight product never materializes
   gumbel      ``logw``    (B, K) masked log-weights
   alias       ``prob``/``alias``  (B, K) Walker/Vose tables
+  alias_device  ``prob``/``alias``  (B, K) — same draw contract as
+              ``alias`` but built ON DEVICE by the split-based PSA
+              builder (``repro.kernels.alias_build``): the build is a
+              closed jaxpr, so ``refreshed()`` and the sparse-LDA sweep
+              rebuild tables in-graph with no host round-trip
+  radix_forest  ``cdf`` (B, K) normalized prefix sums,
+              ``root`` (B, M+1) radix-forest root ranges (Binder &
+              Keller) — divergence-free fixed-depth draw, cumsum-cheap
+              rebuild
   ==========  =====================================================
 
 Numerics are bit-identical to the pre-redesign one-shot paths: every
@@ -64,7 +73,7 @@ from repro.core import butterfly as _bfly
 # via :meth:`Categorical.from_factors` / :meth:`refresh_from_factors`.
 VARIANTS = (
     "prefix", "fenwick", "butterfly", "two_level", "kernel", "gumbel",
-    "alias", "lda_kernel",
+    "alias", "lda_kernel", "alias_device", "radix_forest",
 )
 
 # variants built from a factorization instead of a flat weight matrix
@@ -72,8 +81,11 @@ FACTORED_VARIANTS = ("lda_kernel",)
 
 # u-driven variants draw from a caller-supplied (or key-derived) uniform;
 # key-driven ones consume PRNG state directly
-U_VARIANTS = ("prefix", "fenwick", "butterfly", "two_level", "kernel", "lda_kernel")
-KEY_VARIANTS = ("gumbel", "alias")
+U_VARIANTS = (
+    "prefix", "fenwick", "butterfly", "two_level", "kernel", "lda_kernel",
+    "radix_forest",
+)
+KEY_VARIANTS = ("gumbel", "alias", "alias_device")
 
 # table builds since process start — the "zero rebuilds" witness.  A build
 # inside a jit trace increments exactly once (at trace time); executing
@@ -130,6 +142,16 @@ def _build_state(method: str, weights: jnp.ndarray, W: int) -> Dict[str, Any]:
     if method == "alias":
         tables = _alias.build_alias_tables(weights)
         return {"prob": tables.prob, "alias": tables.alias}
+    if method == "alias_device":
+        from repro.kernels.alias_build import build_alias_tables_device
+
+        tables = build_alias_tables_device(weights)
+        return {"prob": tables.prob, "alias": tables.alias}
+    if method == "radix_forest":
+        from repro.core import radix as _radix
+
+        cdf, root = _radix.build_radix_forest(weights)
+        return {"cdf": cdf, "root": root}
     raise ValueError(f"unknown Categorical variant {method!r}; options: {VARIANTS}")
 
 
@@ -503,6 +525,12 @@ def _draw_with_u(dist: Categorical, u: jnp.ndarray) -> jnp.ndarray:
             u, dist.state["doc_ids"], dist.state["words"],
             K=K, W=W, tb=dist.tb or 8,
         )
+    if method == "radix_forest":
+        from repro.core import radix as _radix
+
+        return _radix.draw_radix_forest(
+            dist.state["cdf"], dist.state["root"], u
+        )
     raise ValueError(
         f"variant {method!r} draws from PRNG keys, not uniforms — pass key="
     )
@@ -515,7 +543,7 @@ def _draw_with_key(dist: Categorical, key: jax.Array) -> jnp.ndarray:
         logw = dist.state["logw"]
         g = jax.random.gumbel(key, logw.shape, dtype=logw.dtype)
         return jnp.argmax(logw + g, axis=-1).astype(jnp.int32)
-    if method == "alias":
+    if method in ("alias", "alias_device"):
         tables = _alias.AliasTable(prob=dist.state["prob"], alias=dist.state["alias"])
         return _alias.draw_alias_batch(tables, key)
     # u-driven variant: derive the uniforms device-side, exactly as the

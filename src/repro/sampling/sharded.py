@@ -63,6 +63,8 @@ _STATE_LEAVES: Dict[str, Tuple[str, ...]] = {
     "kernel": ("weights", "running"),
     "gumbel": ("logw",),
     "alias": ("alias", "prob"),
+    "alias_device": ("alias", "prob"),
+    "radix_forest": ("cdf", "root"),
 }
 
 
@@ -166,7 +168,7 @@ def _local_draw(dist: Categorical, seed2, row0, num_samples: int):
         if num_samples == 1:
             return one(0)
         return jax.vmap(one)(jnp.arange(num_samples, dtype=jnp.uint32))
-    if dist.method == "alias":
+    if dist.method in ("alias", "alias_device"):
         prob, alias = dist.state["prob"], dist.state["alias"]
 
         def one(s):

@@ -450,7 +450,7 @@ class TestTileParamsInCache:
         assert res.tb > 0 and res.tk > 0
         assert res.tk % 1 == 0
         blob = json.load(open(fresh_autotune))
-        assert blob["schema"] == autotune.SCHEMA == "repro-autotune-v5"
+        assert blob["schema"] == autotune.SCHEMA == "repro-autotune-v6"
         (entry,) = blob["entries"].values()
         assert entry["tb"] == res.tb and entry["tk"] == res.tk
         # a cache hit restores the full launch config

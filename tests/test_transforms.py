@@ -668,9 +668,9 @@ class TestAutotuneV4:
         assert "tb" not in cache.get(k_plain)
         assert cache.get(k_dev)["tb"] == 16
         # round-trip through a current-schema save
-        out = cache.save(str(tmp_path / "v5.json"))
+        out = cache.save(str(tmp_path / "v6.json"))
         blob4 = json.loads(open(out).read())
-        assert blob4["schema"] == SCHEMA == "repro-autotune-v5"
+        assert blob4["schema"] == SCHEMA == "repro-autotune-v6"
         c4 = TuningCache(path=out)
         assert len(c4) == 3
         assert c4.get(k_dev) == cache.get(k_dev)
