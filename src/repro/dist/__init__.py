@@ -1,9 +1,18 @@
-"""Distributed substrate: sharding rules, elastic fault tolerance,
-checkpoint/gradient compression, and multi-host monitoring.
+"""Distributed substrate: multi-process runtime bring-up, sharding
+rules, per-host shard checkpoints, compression, cross-host heartbeats
+and monitoring.
 
-The four modules are deliberately independent (no cross-imports except
+The modules are deliberately independent (no cross-imports except
 ``fault`` -> ``compression`` for quantized checkpoints) so each surface
-can be tested on a single CPU host with virtual devices:
+can be tested on a single CPU host with virtual devices — and the
+multi-process paths additionally run as real two-process
+``jax.distributed`` pairs over a loopback coordinator
+(tests/test_multihost.py):
+
+- :mod:`repro.dist.multihost` — ``init_from_env()``: the
+  coordinator-address env contract (``REPRO_COORDINATOR`` etc.) turned
+  into a connected ``jax.distributed`` runtime with retry/backoff, a
+  clean single-process no-op when unset.
 
 - :mod:`repro.dist.sharding` — the logical-axis rules engine that turns
   ``ParamSpec.axes`` names (``vocab``, ``embed``, ``heads``, ...) into
@@ -11,7 +20,8 @@ can be tested on a single CPU host with virtual devices:
   replication.  Used by the dry-run, the memory model, the launchers and
   (through :func:`repro.dist.sharding.constrain_activation`) the model
   forward passes themselves.
-- :mod:`repro.dist.fault` — atomic multi-host-safe checkpoints that
+- :mod:`repro.dist.fault` — atomic per-host shard checkpoints
+  (``data.rank{i}.bin`` + process-0 manifest, nothing gathered) that
   reshard on restore (elastic mesh_a -> mesh_b resume), async saves, and
   the SIGTERM preemption hook.
 - :mod:`repro.dist.compression` — int8 per-tensor quantization for
@@ -19,10 +29,28 @@ can be tested on a single CPU host with virtual devices:
   compressed-allreduce simulation.
 - :mod:`repro.dist.monitor` — per-step timing aggregation across hosts:
   tokens/sec, straggler flagging, heartbeat-based dead-host detection.
+- :mod:`repro.dist.heartbeat` — the transport feeding the monitor in
+  multi-process runs: per-host mailbox files on shared storage (atomic
+  writes, step-record rings) with an in-process fallback, plus the
+  ``MonitorFeeder`` that aligns complete per-step rows.
 
-See DESIGN.md §8 "Distributed substrate".
+See DESIGN.md §8 "Distributed substrate" and docs/OPERATIONS.md.
 """
 
-from repro.dist import compression, fault, monitor, sharding
+from repro.dist import (
+    compression,
+    fault,
+    heartbeat,
+    monitor,
+    multihost,
+    sharding,
+)
 
-__all__ = ["sharding", "fault", "compression", "monitor"]
+__all__ = [
+    "sharding",
+    "fault",
+    "compression",
+    "monitor",
+    "multihost",
+    "heartbeat",
+]

@@ -58,6 +58,7 @@ def simulate_compressed_allreduce(
     new_residuals = []
     for g, r in zip(grads, residuals):
         def one(gl, rl):
+            """Quantize one leaf + carried residual; return (deq, new residual)."""
             c = gl.astype(jnp.float32) + rl
             q, s = quantize_int8(c)
             d = dequantize_int8(q, s)

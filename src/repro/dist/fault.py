@@ -1,38 +1,57 @@
-"""Elastic fault tolerance: atomic checkpoints that reshard on restore,
-async saves, and the preemption hook.
+"""Elastic fault tolerance: per-host shard checkpoints that reshard on
+restore, async saves, and the preemption hook.
 
-Checkpoint layout on disk (DESIGN.md §8)::
+Checkpoint layout on disk (DESIGN.md §8, docs/OPERATIONS.md)::
 
     <dir>/
       step_00000042/
-        manifest.json     # schema, leaf table (shape/dtype/offset/enc),
-                          # user 'extra' payload, step number
-        data.bin          # leaf payloads, concatenated raw little-endian
-                          # bytes (int8 q + fp32 scale pairs when enc=int8)
+        manifest.json      # schema, global leaf table (shape/dtype/enc),
+                           # per-rank shard tables (block index/offset),
+                           # per-rank file hashes, save topology, user
+                           # 'extra' payload, step number
+        data.rank0.bin     # process 0's owned blocks, concatenated raw
+        data.rank1.bin     # process 1's owned blocks
+        ...
 
-A checkpoint is *committed* by the atomic ``os.replace`` of a finished
-temp directory onto ``step_N`` — readers never observe a partial
-checkpoint, and a preempted writer leaves only a ``.tmp-*`` directory
-that the next save garbage-collects.  Multi-host: every process computes
-the same bytes from its addressable shards' global view, but only
-process 0 writes (single-controller CPU runs are process 0 by
-definition).
+Every process writes ONLY the blocks it owns — the addressable shards
+of each leaf with ``replica_id == 0`` (so replicated leaves are written
+exactly once, by whichever process holds replica 0).  Nothing is ever
+gathered to process 0: the largest buffer any host touches is its own
+largest shard.  Host-only leaves (plain numpy, fully-addressable
+arrays) are treated as replicated and written by process 0.
 
-Restore is *elastic*: values are stored mesh-free (the fully gathered
-global array), so ``restore(like=tree, shardings=new_tree)`` places the
-same values onto ANY mesh whose shardings you hand it — a checkpoint
-saved on a (4, 2) mesh resumes on (2, 4), (1, 1) or (8, 1) bit-exactly.
+The commit protocol: each rank streams its blocks into
+``.tmp-<step>/data.rank{i}.bin``, fsyncs, then atomically publishes a
+``shards.rank{i}.json`` marker (block table + content hash).  Process 0
+waits for ALL markers, merges them into ``manifest.json``, verifies the
+shard tables cover every leaf, and only then commits the whole step by
+one atomic ``os.replace`` of the temp directory — readers never observe
+a partial checkpoint, a writer killed mid-save leaves only a
+``.tmp-*`` directory the next save garbage-collects, and a checkpoint
+missing any host's fsynced bytes is never committed at all.
+
+Restore is *elastic and lazy*: block indices are global coordinates, so
+``restore(like=tree, shardings=new_tree)`` assembles exactly the
+regions the new placement puts on THIS host, reading only the rank
+files that contain them (``restore_stats()`` reports which) — a
+checkpoint saved by 2 processes restores onto 1 host, 4 hosts, or any
+other mesh bit-exactly.  Rank files are hash-verified on first touch,
+and a manifest whose recorded topology or shard tables disagree with
+the on-disk files raises a descriptive error instead of loading
+garbage.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import shutil
 import signal
 import threading
-from typing import Dict, List, Optional, Tuple
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,47 +60,101 @@ import numpy as np
 from repro.dist.compression import dequantize_int8, quantize_int8
 
 _MANIFEST = "manifest.json"
-_DATA = "data.bin"
-_SCHEMA = 1
+_SCHEMA = 2
+_LEGACY_DATA = "data.bin"          # schema-1 single-file checkpoints
 
 # dtypes stored as int8 (+ fp32 scale) when the manager compresses
 _COMPRESSIBLE = ("float32", "float64")
 
 
+def _rank_file(rank: int) -> str:
+    return f"data.rank{rank}.bin"
+
+
+def _marker_file(rank: int) -> str:
+    return f"shards.rank{rank}.json"
+
+
 @dataclasses.dataclass
-class _LeafMeta:
-    shape: Tuple[int, ...]
-    dtype: str
-    offset: int
-    nbytes: int
-    enc: str = "raw"            # raw | int8
-    scale: float = 0.0          # int8 per-tensor scale
+class _Block:
+    """One owned block of one leaf: global index + payload bytes."""
+
+    leaf: int
+    index: Tuple[Tuple[int, int], ...]   # ((start, stop), ...) per dim
+    data: np.ndarray                     # host snapshot, C-contiguous
 
 
-def _host_value(x) -> np.ndarray:
-    """Fully-gathered host copy of a (possibly sharded) array."""
+def _c_contiguous(x) -> np.ndarray:
+    """Host snapshot, C-contiguous, WITHOUT promoting 0-d to 1-d
+    (``np.ascontiguousarray`` would, desyncing block indices from the
+    recorded leaf shape)."""
+    arr = np.asarray(x)
+    return arr if arr.flags["C_CONTIGUOUS"] else np.ascontiguousarray(arr)
+
+
+def _norm_index(index, shape) -> Tuple[Tuple[int, int], ...]:
+    """A shard's ``.index`` (slices) as concrete ((start, stop), ...)."""
+    out = []
+    for sl, dim in zip(index, shape):
+        start = 0 if sl.start is None else int(sl.start)
+        stop = int(dim) if sl.stop is None else int(sl.stop)
+        out.append((start, stop))
+    return tuple(out)
+
+
+def _owned_blocks(leaf_id: int, x, process_index: int) -> List[_Block]:
+    """The blocks THIS process writes for one leaf.
+
+    jax Arrays spanning processes contribute their local replica-0
+    shards; everything else (numpy, scalars, fully-addressable arrays)
+    is host-replicated state that process 0 alone persists.
+    """
     if isinstance(x, jax.Array) and not x.is_fully_addressable:
-        # multi-host: gather the global value through the addressable
-        # shards (each process holds the same global view after this)
-        from jax.experimental import multihost_utils
+        blocks = []
+        for s in x.addressable_shards:
+            if s.replica_id != 0:
+                continue
+            arr = _c_contiguous(s.data)
+            blocks.append(_Block(leaf_id, _norm_index(s.index, x.shape), arr))
+        return blocks
+    if process_index != 0:
+        return []
+    arr = _c_contiguous(jax.device_get(x))
+    full = tuple((0, int(d)) for d in arr.shape)
+    return [_Block(leaf_id, full, arr)]
 
-        x = multihost_utils.process_allgather(x, tiled=True)
-    return np.asarray(jax.device_get(x))
+
+def _block_volume(index: Sequence[Sequence[int]]) -> int:
+    vol = 1
+    for start, stop in index:
+        vol *= max(int(stop) - int(start), 0)
+    return vol
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint on disk disagrees with its manifest (skew/corruption)."""
 
 
 class CheckpointManager:
-    """Atomic, GC'd, optionally-async checkpoints under one directory.
+    """Atomic, GC'd, optionally-async per-host shard checkpoints.
 
     Parameters
     ----------
-    dir: checkpoint root (created on first save).
+    dir: checkpoint root (created on first save).  In a multi-process
+        run this must be shared storage every host can reach.
     keep: how many committed steps to retain (older ones are deleted
         after each successful save); ``None``/0 keeps everything.
-    async_save: hand the (already host-snapshotted) write to a background
-        thread.  ``save(..., block=True)`` or :meth:`wait` joins it.
-    compress: store float leaves as int8 + per-tensor scale
+    async_save: hand the (already host-snapshotted) write to a
+        background thread.  ``save(..., block=True)`` or :meth:`wait`
+        joins it.
+    compress: store float blocks as int8 + per-block fp32 scale
         (:mod:`repro.dist.compression`) — lossy by <= scale/2 per
         element; intended for optimizer moments, not params.
+    commit_timeout: how long process 0 waits for every rank's fsynced
+        marker before failing the save (and how long other ranks wait
+        for the commit to appear).
+    process_index / process_count: rank overrides for tests; default to
+        ``jax.process_index()`` / ``jax.process_count()`` at save time.
     """
 
     def __init__(
@@ -90,20 +163,39 @@ class CheckpointManager:
         keep: Optional[int] = None,
         async_save: bool = True,
         compress: bool = False,
+        commit_timeout: float = 120.0,
+        process_index: Optional[int] = None,
+        process_count: Optional[int] = None,
     ):
         self.dir = dir
         self.keep = keep
         self.async_save = async_save
         self.compress = compress
+        self.commit_timeout = float(commit_timeout)
+        self._proc = process_index
+        self._nproc = process_count
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        self._restore_stats: Dict[str, object] = {}
+
+    def _rank(self) -> int:
+        return jax.process_index() if self._proc is None else int(self._proc)
+
+    def _world(self) -> int:
+        return jax.process_count() if self._nproc is None else int(self._nproc)
 
     # -- paths -------------------------------------------------------------
 
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.dir, f"step_{step:08d}")
 
+    def _tmp_dir(self, step: int) -> str:
+        # shared by every rank of one save — the name must be derivable
+        # without communication, so it carries the step, not a pid
+        return os.path.join(self.dir, f".tmp-{step:08d}")
+
     def steps(self) -> List[int]:
+        """Committed step numbers under the root, ascending."""
         if not os.path.isdir(self.dir):
             return []
         out = []
@@ -116,74 +208,185 @@ class CheckpointManager:
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
+        """The newest committed step, or ``None`` on an empty root."""
         steps = self.steps()
         return steps[-1] if steps else None
 
     # -- save --------------------------------------------------------------
 
     def save(self, step: int, tree, extra: Optional[Dict] = None,
-             block: bool = False) -> None:
-        """Snapshot ``tree`` on the host NOW, then write (async by default).
+             block: bool = False, mesh=None) -> None:
+        """Snapshot this host's owned blocks NOW, then write (async).
 
-        The snapshot happens synchronously so donated/overwritten device
-        buffers can't race the writer thread; only serialization and I/O
-        move off-thread.
+        Every process of the run calls ``save`` with the same global
+        ``tree``; each writes only its own shards.  The snapshot happens
+        synchronously so donated/overwritten device buffers can't race
+        the writer thread; serialization, fsync and the commit barrier
+        move off-thread.  ``mesh`` (a Mesh or ``{axis: size}`` mapping)
+        is recorded in the manifest topology for the operator's benefit.
         """
         self.wait()  # serialize saves; surface a previous writer's error
         leaves, treedef = jax.tree.flatten(tree)
-        host_leaves = [_host_value(x) for x in leaves]
+        rank = self._rank()
+        blocks: List[_Block] = []
+        for i, x in enumerate(leaves):
+            blocks.extend(_owned_blocks(i, x, rank))
+        leaf_meta = [
+            {"shape": tuple(int(d) for d in np.shape(jax.device_get(x) if not isinstance(x, jax.Array) else x)),
+             "dtype": str(x.dtype if hasattr(x, "dtype") else np.asarray(x).dtype)}
+            for x in leaves
+        ]
+        if mesh is not None:
+            mesh = dict(getattr(mesh, "shape", mesh))
+            mesh = {str(k): int(v) for k, v in mesh.items()}
         payload = {
             "step": int(step),
             "treedef": str(treedef),
             "extra": extra if extra is not None else {},
+            "topology": {
+                "processes": self._world(),
+                "devices": jax.device_count(),
+                "mesh": mesh,
+            },
         }
 
         if self.async_save and not block:
             self._thread = threading.Thread(
-                target=self._write_guarded, args=(step, host_leaves, payload),
-                daemon=True,
+                target=self._write_guarded,
+                args=(step, blocks, leaf_meta, payload), daemon=True,
             )
             self._thread.start()
         else:
-            self._write(step, host_leaves, payload)
+            self._write(step, blocks, leaf_meta, payload)
 
-    def _write_guarded(self, step, host_leaves, payload):
+    def _write_guarded(self, step, blocks, leaf_meta, payload):
         try:
-            self._write(step, host_leaves, payload)
+            self._write(step, blocks, leaf_meta, payload)
         except BaseException as e:  # re-raised from wait()
             self._error = e
 
-    def _write(self, step: int, host_leaves: List[np.ndarray], payload: Dict):
-        if jax.process_index() != 0:
-            return
+    def _write(self, step: int, blocks: List[_Block],
+               leaf_meta: List[Dict], payload: Dict):
+        rank, world = self._rank(), self._world()
         os.makedirs(self.dir, exist_ok=True)
-        # clear stale temp dirs from preempted writers
-        for name in os.listdir(self.dir):
-            if name.startswith(".tmp-"):
-                shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
-        tmp = os.path.join(self.dir, f".tmp-{step}-{os.getpid()}")
+        tmp = self._tmp_dir(step)
+        if rank == 0:
+            # clear stale temp dirs from preempted writers — but never
+            # the dir other ranks of THIS save may already be filling
+            for name in os.listdir(self.dir):
+                if name.startswith(".tmp-") and name != os.path.basename(tmp):
+                    shutil.rmtree(os.path.join(self.dir, name),
+                                  ignore_errors=True)
         os.makedirs(tmp, exist_ok=True)
-        metas: List[Dict] = []
+
+        # ---- every rank: stream owned blocks, fsync, publish marker
+        table: List[Dict] = []
         offset = 0
-        with open(os.path.join(tmp, _DATA), "wb") as f:
-            for arr in host_leaves:
+        digest = hashlib.sha256()
+        with open(os.path.join(tmp, _rank_file(rank)), "wb") as f:
+            for b in blocks:
                 enc, scale = "raw", 0.0
-                buf = arr
-                if self.compress and str(arr.dtype) in _COMPRESSIBLE and arr.size:
-                    q, s = quantize_int8(jnp.asarray(arr))
+                buf = b.data
+                if (self.compress and str(buf.dtype) in _COMPRESSIBLE
+                        and buf.size):
+                    q, s = quantize_int8(jnp.asarray(buf))
                     buf = np.asarray(q)
                     enc, scale = "int8", float(s)
                 data = buf.tobytes()
-                metas.append(dataclasses.asdict(_LeafMeta(
-                    shape=tuple(int(d) for d in arr.shape),
-                    dtype=str(arr.dtype), offset=offset, nbytes=len(data),
-                    enc=enc, scale=scale,
-                )))
+                table.append({
+                    "leaf": b.leaf,
+                    "index": [list(se) for se in b.index],
+                    "offset": offset, "nbytes": len(data),
+                    "enc": enc, "scale": scale,
+                })
                 f.write(data)
+                digest.update(data)
                 offset += len(data)
-        manifest = {"schema": _SCHEMA, "leaves": metas, **payload}
+            f.flush()
+            os.fsync(f.fileno())
+        marker = {
+            "rank": rank, "nbytes": offset,
+            "sha256": digest.hexdigest(), "shards": table,
+        }
+        mpath = os.path.join(tmp, _marker_file(rank))
+        with open(mpath + ".part", "w") as f:
+            json.dump(marker, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(mpath + ".part", mpath)
+
+        if rank != 0:
+            # wait for process 0's commit so block=True/wait() means
+            # "my shards are in a committed checkpoint"
+            deadline = time.monotonic() + self.commit_timeout
+            final = self._step_dir(step)
+            while not os.path.isdir(final):
+                if time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"rank {rank}: step {step} was never committed by "
+                        f"process 0 within {self.commit_timeout:.0f}s"
+                    )
+                time.sleep(0.02)
+            return
+
+        # ---- process 0: wait for every rank's fsynced marker, merge,
+        # verify coverage, commit atomically
+        deadline = time.monotonic() + self.commit_timeout
+        markers: Dict[int, Dict] = {}
+        while len(markers) < world:
+            for r in range(world):
+                if r in markers:
+                    continue
+                p = os.path.join(tmp, _marker_file(r))
+                if os.path.exists(p):
+                    with open(p) as f:
+                        markers[r] = json.load(f)
+            if len(markers) < world:
+                if time.monotonic() > deadline:
+                    missing = sorted(set(range(world)) - set(markers))
+                    raise TimeoutError(
+                        f"step {step}: ranks {missing} never published "
+                        f"their shard markers within "
+                        f"{self.commit_timeout:.0f}s — checkpoint NOT "
+                        f"committed"
+                    )
+                time.sleep(0.02)
+
+        # coverage: the union of every rank's blocks must tile each leaf
+        vol = [0] * len(leaf_meta)
+        for m in markers.values():
+            for sh in m["shards"]:
+                vol[sh["leaf"]] += _block_volume(sh["index"])
+        for i, meta in enumerate(leaf_meta):
+            want = int(np.prod(meta["shape"])) if meta["shape"] else 1
+            if vol[i] != want:
+                raise CheckpointError(
+                    f"step {step}: leaf {i} {tuple(meta['shape'])} has "
+                    f"shard coverage {vol[i]}/{want} elements across "
+                    f"{world} ranks — refusing to commit a checkpoint "
+                    f"with holes"
+                )
+
+        manifest = {
+            "schema": _SCHEMA,
+            "leaves": leaf_meta,
+            "shards": {str(r): m["shards"] for r, m in markers.items()},
+            "files": {
+                str(r): {
+                    "name": _rank_file(r),
+                    "nbytes": m["nbytes"],
+                    "sha256": m["sha256"],
+                }
+                for r, m in markers.items()
+            },
+            **payload,
+        }
         with open(os.path.join(tmp, _MANIFEST), "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        for r in range(world):
+            os.remove(os.path.join(tmp, _marker_file(r)))
         final = self._step_dir(step)
         if os.path.isdir(final):
             shutil.rmtree(final)
@@ -212,10 +415,16 @@ class CheckpointManager:
         """Read a checkpoint back as ``(tree, extra)``.
 
         ``like`` supplies the tree structure (its values are ignored).
-        ``shardings`` — a matching tree of ``NamedSharding``s — reshards
-        every leaf onto its new placement via ``jax.device_put``; this is
-        the elastic path (the saved mesh is irrelevant).  Without it,
-        leaves come back as committed host->default-device arrays.
+        ``shardings`` — a matching tree of ``NamedSharding``s — places
+        every leaf onto its new mesh; this is the elastic path, and it
+        is also the *lazy* path: only the regions this host's devices
+        address are assembled, from only the rank files holding them.
+        Without ``shardings``, leaves come back fully assembled on the
+        default device.
+
+        Raises :class:`CheckpointError` when the on-disk shard files
+        disagree with the manifest (missing ranks, truncated or
+        corrupted payloads, shard tables that don't cover a leaf).
         """
         self.wait()
         if step is None:
@@ -225,8 +434,8 @@ class CheckpointManager:
         d = self._step_dir(step)
         with open(os.path.join(d, _MANIFEST)) as f:
             manifest = json.load(f)
-        leaves_meta = manifest["leaves"]
         _, treedef = jax.tree.flatten(like)
+        leaves_meta = manifest["leaves"]
         if treedef.num_leaves != len(leaves_meta):
             raise ValueError(
                 f"checkpoint step {step} holds {len(leaves_meta)} leaves but "
@@ -236,10 +445,158 @@ class CheckpointManager:
             treedef.flatten_up_to(shardings) if shardings is not None
             else [None] * len(leaves_meta)
         )
-        with open(os.path.join(d, _DATA), "rb") as f:
+        if manifest.get("schema", 1) < 2:
+            out = self._read_v1(d, manifest, sh_leaves)
+            return jax.tree.unflatten(treedef, out), manifest.get("extra", {})
+
+        self._check_rank_files(d, manifest, step)
+        # leaf -> [(rank, shard-entry)] once, in deterministic order
+        by_leaf: Dict[int, List[Tuple[int, Dict]]] = {}
+        for r_str, shards in manifest["shards"].items():
+            for sh in shards:
+                by_leaf.setdefault(int(sh["leaf"]), []).append((int(r_str), sh))
+        file_cache: Dict[int, bytes] = {}
+        stats = {"files_read": [], "bytes_read": 0}
+
+        def rank_bytes(rank: int) -> bytes:
+            """Load + hash-verify one rank's data file (once)."""
+            if rank not in file_cache:
+                finfo = manifest["files"][str(rank)]
+                path = os.path.join(d, finfo["name"])
+                with open(path, "rb") as f:
+                    blob = f.read()
+                sha = hashlib.sha256(blob).hexdigest()
+                if sha != finfo["sha256"]:
+                    raise CheckpointError(
+                        f"step {step}: {finfo['name']} content hash "
+                        f"{sha[:12]} != manifest {finfo['sha256'][:12]} — "
+                        f"shard file corrupted or from a different save"
+                    )
+                file_cache[rank] = blob
+                stats["files_read"].append(finfo["name"])
+                stats["bytes_read"] += len(blob)
+            return file_cache[rank]
+
+        def region(li: int, index) -> np.ndarray:
+            """Assemble one requested region of leaf ``li`` from blocks."""
+            meta = leaves_meta[li]
+            shape = tuple(meta["shape"])
+            dtype = jnp.dtype(meta["dtype"])
+            want = _norm_index(index, shape)
+            rshape = tuple(stop - start for start, stop in want)
+            out = np.zeros(rshape, dtype)
+            filled = np.zeros(rshape, bool) if rshape else np.zeros((), bool)
+            for rank, sh in by_leaf.get(li, []):
+                have = tuple((int(a), int(b)) for a, b in sh["index"])
+                inter = tuple(
+                    (max(a0, b0), min(a1, b1))
+                    for (a0, a1), (b0, b1) in zip(have, want)
+                )
+                if any(a >= b for a, b in inter):
+                    continue
+                blob = rank_bytes(rank)
+                raw = blob[sh["offset"]: sh["offset"] + sh["nbytes"]]
+                if len(raw) != sh["nbytes"]:
+                    raise CheckpointError(
+                        f"step {step}: rank {rank} shard of leaf {li} is "
+                        f"truncated ({len(raw)}/{sh['nbytes']} bytes)"
+                    )
+                bshape = tuple(b - a for a, b in have)
+                if sh.get("enc") == "int8":
+                    q = np.frombuffer(raw, np.int8).reshape(bshape)
+                    block = np.asarray(
+                        dequantize_int8(jnp.asarray(q),
+                                        jnp.float32(sh["scale"]))
+                    ).astype(dtype)
+                else:
+                    block = np.frombuffer(raw, dtype).reshape(bshape)
+                if not rshape:            # scalar leaf
+                    out[()] = block
+                    filled[()] = True
+                    continue
+                dst = tuple(
+                    slice(a - w0, b - w0)
+                    for (a, b), (w0, _) in zip(inter, want)
+                )
+                src = tuple(
+                    slice(a - h0, b - h0)
+                    for (a, b), (h0, _) in zip(inter, have)
+                )
+                out[dst] = block[src]
+                filled[dst] = True
+            if not bool(np.all(filled)):
+                raise CheckpointError(
+                    f"step {step}: shard tables do not cover region "
+                    f"{want} of leaf {li} {shape} — saved on "
+                    f"{manifest['topology']['processes']} processes; "
+                    f"manifest and data files disagree"
+                )
+            return out
+
+        out = []
+        for li, (meta, sh) in enumerate(zip(leaves_meta, sh_leaves)):
+            shape = tuple(meta["shape"])
+            if sh is not None:
+                out.append(jax.make_array_from_callback(
+                    shape, sh, lambda idx, li=li: region(li, idx)
+                ))
+            else:
+                full = tuple(slice(0, d_) for d_ in shape)
+                out.append(jnp.asarray(region(li, full)))
+        self._restore_stats = {
+            "step": int(step),
+            "files_read": sorted(stats["files_read"]),
+            "bytes_read": int(stats["bytes_read"]),
+            "saved_topology": manifest.get("topology", {}),
+        }
+        tree = jax.tree.unflatten(treedef, out)
+        return tree, manifest.get("extra", {})
+
+    def restore_stats(self) -> Dict[str, object]:
+        """What the last :meth:`restore` actually read from disk.
+
+        ``files_read`` / ``bytes_read`` make the only-my-shards contract
+        observable: a host restoring its own placement under the save
+        topology reads only the rank files holding its rows.
+        """
+        return dict(self._restore_stats)
+
+    def _check_rank_files(self, d: str, manifest: Dict, step: int) -> None:
+        """Manifest-vs-disk skew checks that don't require reading data."""
+        files = manifest.get("files", {})
+        topo = manifest.get("topology", {})
+        nproc = int(topo.get("processes", len(files)))
+        if len(files) != nproc:
+            raise CheckpointError(
+                f"step {step}: manifest topology says {nproc} processes "
+                f"but records {len(files)} shard files — manifest is "
+                f"internally inconsistent"
+            )
+        on_disk = set(os.listdir(d))
+        missing = [f["name"] for f in files.values()
+                   if f["name"] not in on_disk]
+        if missing:
+            raise CheckpointError(
+                f"step {step}: manifest (saved on {nproc} processes) "
+                f"lists shard files {sorted(missing)} that are missing "
+                f"on disk — topology skew or partial copy; refusing to "
+                f"load"
+            )
+        for f in files.values():
+            size = os.path.getsize(os.path.join(d, f["name"]))
+            if size != int(f["nbytes"]):
+                raise CheckpointError(
+                    f"step {step}: {f['name']} is {size} bytes on disk "
+                    f"but the manifest recorded {f['nbytes']} — "
+                    f"truncated or mixed-save shard file"
+                )
+
+    def _read_v1(self, d: str, manifest: Dict, sh_leaves) -> List:
+        """Schema-1 reader: the legacy single gathered ``data.bin``."""
+        with open(os.path.join(d, _LEGACY_DATA), "rb") as f:
             blob = f.read()
         out = []
-        for meta, sh in zip(leaves_meta, sh_leaves):
+        for meta, sh in zip(manifest["leaves"], sh_leaves):
             raw = blob[meta["offset"]: meta["offset"] + meta["nbytes"]]
             shape = tuple(meta["shape"])
             if meta.get("enc") == "int8":
@@ -254,8 +611,7 @@ class CheckpointManager:
                 out.append(jax.device_put(arr, sh))
             else:
                 out.append(jnp.asarray(arr))
-        tree = jax.tree.unflatten(treedef, out)
-        return tree, manifest.get("extra", {})
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -263,7 +619,7 @@ class CheckpointManager:
 # ---------------------------------------------------------------------------
 
 # SIGTERM flips this event; the train loop polls ``preempted()`` each step
-# and commits a final checkpoint before exiting (launch/train.py).
+# and commits a final checkpoint before exiting (launch/train.py)
 _PREEMPTED = threading.Event()
 
 
@@ -277,6 +633,7 @@ def install_preemption_handler(signals: Tuple[int, ...] = (signal.SIGTERM,)) -> 
         prev = signal.getsignal(sig)
 
         def handler(signum, frame, _prev=prev):
+            """Set the sticky preemption flag, then chain the prior handler."""
             _PREEMPTED.set()
             if callable(_prev) and _prev not in (signal.SIG_IGN, signal.SIG_DFL):
                 _prev(signum, frame)
@@ -300,4 +657,5 @@ def _signal_preemption() -> None:
 
 
 def reset_preemption() -> None:
+    """Clear the sticky preemption flag (between tests / after resume)."""
     _PREEMPTED.clear()

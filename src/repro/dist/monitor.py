@@ -24,6 +24,18 @@ import numpy as np
 
 
 class StepMonitor:
+    """Sliding-window per-host step statistics for the launcher.
+
+    Feed it aligned rows (``record``) and liveness pings
+    (``heartbeat``) — in multi-process runs both arrive through
+    :class:`repro.dist.heartbeat.MonitorFeeder`, which polls every
+    host's mailbox and aligns complete per-step rows; single-process
+    runs call them directly.  Timestamps passed as ``now`` must come
+    from one consistent clock: ``time.time()`` when rows cross
+    processes (see :mod:`repro.dist.heartbeat`), the default
+    ``time.monotonic()`` otherwise.
+    """
+
     def __init__(
         self,
         num_hosts: int = 1,
@@ -41,6 +53,10 @@ class StepMonitor:
         self._tokens: Deque[float] = collections.deque(maxlen=self.window)
         self._last_heartbeat = np.full(self.num_hosts, -np.inf)
         self._steps = 0
+        # timestamp of the first beat anywhere in the fleet: never-beaten
+        # hosts are measured against it, not -inf, so startup compile skew
+        # (one rank beating while another still traces) can't false-flag
+        self._armed_at: Optional[float] = None
 
     # -- feeding -----------------------------------------------------------
 
@@ -64,11 +80,19 @@ class StepMonitor:
         now = time.monotonic() if now is None else now
         self._last_heartbeat[np.isfinite(t)] = now
         self._steps += 1
+        if self._armed_at is None:
+            self._armed_at = now
 
     def heartbeat(self, host: int, now: Optional[float] = None) -> None:
-        self._last_heartbeat[int(host)] = (
-            time.monotonic() if now is None else now
-        )
+        """Mark ``host`` alive at ``now`` without recording a step time.
+
+        The feeder calls this on every mailbox poll, so a host that
+        dies before the fleet completes a single aligned row is still
+        detected by :meth:`dead_hosts`."""
+        now = time.monotonic() if now is None else now
+        self._last_heartbeat[int(host)] = now
+        if self._armed_at is None:
+            self._armed_at = now
 
     # -- straggler detection -----------------------------------------------
 
@@ -98,12 +122,18 @@ class StepMonitor:
         return inv * (self.num_hosts / inv.sum())
 
     def dead_hosts(self, now: Optional[float] = None) -> List[int]:
-        """Hosts with no heartbeat for ``heartbeat_timeout`` seconds
-        (never-seen hosts only count once anything has been recorded)."""
-        if self._steps == 0:
+        """Hosts with no heartbeat for ``heartbeat_timeout`` seconds.
+
+        Empty until the first ``record``/``heartbeat`` arrives (an idle
+        monitor flags nobody).  A host that has *never* beaten is
+        measured from that first beat, so it goes dead once the timeout
+        elapses — but startup skew (one rank still compiling while
+        another already beats) doesn't false-flag it instantly."""
+        if self._armed_at is None:
             return []
         now = time.monotonic() if now is None else now
-        stale = now - self._last_heartbeat > self.heartbeat_timeout
+        last = np.maximum(self._last_heartbeat, self._armed_at)
+        stale = now - last > self.heartbeat_timeout
         return [int(i) for i in np.nonzero(stale)[0]]
 
     # -- reporting ----------------------------------------------------------
@@ -150,6 +180,8 @@ class StepMonitor:
         ]
 
     def to_markdown(self) -> str:
+        """The :meth:`summary_rows` table as GitHub markdown (for BENCH
+        artifacts and step-log dumps)."""
         rows = self.summary_rows()
         if not rows:
             return "(no monitor records)"

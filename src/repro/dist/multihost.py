@@ -1,0 +1,260 @@
+"""Multi-process runtime initialization for `jax.distributed`.
+
+One entry point, :func:`init_from_env`, turns a set of per-process
+environment variables (or explicit arguments) into a connected
+``jax.distributed`` runtime with connect retry/backoff, and degrades to
+a clean single-process no-op when no coordinator is configured — so the
+same launcher command line works on a laptop and on a multi-host fleet.
+
+The environment contract (every process of one run sets all three)::
+
+    REPRO_COORDINATOR    host:port of process 0's coordination service
+    REPRO_NUM_PROCESSES  world size (total process count)
+    REPRO_PROCESS_ID     this process's rank in [0, num_processes)
+
+Optional knobs::
+
+    REPRO_CONNECT_TIMEOUT  total seconds to keep retrying (default 60)
+    REPRO_CONNECT_BACKOFF  initial retry backoff seconds (default 0.5,
+                           doubled per attempt, capped at 8)
+
+``jax.distributed.initialize`` itself blocks until the coordinator is
+reachable, but it gives up permanently on transient startup races (the
+coordinator process scheduled late, a port briefly in TIME_WAIT).  The
+retry loop here turns those into bounded backoff-and-reconnect attempts,
+which is what makes ``sbatch``-style "launch N processes and let them
+find each other" robust.
+
+On the CPU backend, cross-process computations additionally need a CPU
+collectives implementation; :func:`init_from_env` enables jax's gloo
+backend there automatically (this is how the two-process CPU tests and
+the loopback quickstart in docs/OPERATIONS.md run real multi-process
+sweeps on one machine).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Optional
+
+import jax
+
+_ENV_COORD = "REPRO_COORDINATOR"
+_ENV_NPROC = "REPRO_NUM_PROCESSES"
+_ENV_PID = "REPRO_PROCESS_ID"
+_ENV_TIMEOUT = "REPRO_CONNECT_TIMEOUT"
+_ENV_BACKOFF = "REPRO_CONNECT_BACKOFF"
+
+_BACKOFF_CAP = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessInfo:
+    """What :func:`init_from_env` resolved: rank, world size, coordinator.
+
+    ``initialized`` is True only when ``jax.distributed.initialize`` was
+    actually called (a multi-process run); single-process no-op runs get
+    ``ProcessInfo(0, 1, None, False)``.
+    """
+
+    process_index: int
+    process_count: int
+    coordinator: Optional[str]
+    initialized: bool
+
+    @property
+    def is_multiprocess(self) -> bool:
+        """True when this run spans more than one process."""
+        return self.process_count > 1
+
+
+# The module remembers what it did so repeated calls (launcher + library
+# code both asking) are idempotent instead of re-initializing the runtime.
+_STATE: Optional[ProcessInfo] = None
+
+
+def _already_initialized() -> bool:
+    """True when some earlier code already brought the jax runtime up."""
+    try:
+        from jax._src import distributed as _dist
+
+        return _dist.global_state.client is not None
+    except Exception:
+        return False
+
+
+def _enable_cpu_collectives() -> None:
+    """Turn on gloo CPU collectives when the run targets the CPU backend.
+
+    Without this, multi-process computations on CPU fail with
+    "Multiprocess computations aren't implemented on the CPU backend".
+    Harmless (and skipped) for TPU/GPU processes; also skipped once any
+    backend exists — flipping the flag then would tear the live backend
+    down and rebuild it expecting a distributed client.  Wrapped
+    defensively because the config name is version-dependent.
+    """
+    platforms = os.environ.get("JAX_PLATFORMS", "")
+    if platforms and "cpu" not in platforms:
+        return
+    try:
+        from jax._src import xla_bridge
+
+        if xla_bridge._backends:
+            return
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:
+        pass
+
+
+def init_from_env(
+    coordinator: Optional[str] = None,
+    num_processes: Optional[int] = None,
+    process_id: Optional[int] = None,
+    timeout: Optional[float] = None,
+    backoff: Optional[float] = None,
+    _initialize=None,
+) -> ProcessInfo:
+    """Bring up ``jax.distributed`` from env vars, with retry/backoff.
+
+    Explicit arguments override the ``REPRO_*`` environment variables
+    (the launcher's ``--coordinator`` flag passes through here).  With no
+    coordinator configured anywhere, or a world size of 1, this is a
+    no-op and the process runs single-controller exactly as before.
+
+    Retry semantics: each connect attempt gets a slice of the total
+    ``timeout`` budget; a failed attempt sleeps an exponentially growing
+    backoff and tries again until the budget is exhausted, then raises
+    ``TimeoutError`` naming the coordinator address.  Idempotent: a
+    second call returns the first call's :class:`ProcessInfo`.
+
+    ``_initialize`` is a test seam for the underlying
+    ``jax.distributed.initialize``.
+    """
+    global _STATE
+    if _STATE is not None:
+        return _STATE
+
+    coordinator = coordinator or os.environ.get(_ENV_COORD) or None
+    if num_processes is None:
+        num_processes = int(os.environ.get(_ENV_NPROC, "1"))
+    if process_id is None:
+        process_id = int(os.environ.get(_ENV_PID, "0"))
+    if timeout is None:
+        timeout = float(os.environ.get(_ENV_TIMEOUT, "60"))
+    if backoff is None:
+        backoff = float(os.environ.get(_ENV_BACKOFF, "0.5"))
+
+    if coordinator is None or num_processes <= 1:
+        _STATE = ProcessInfo(0, 1, None, False)
+        return _STATE
+    if not (0 <= process_id < num_processes):
+        raise ValueError(
+            f"process_id {process_id} out of range for "
+            f"num_processes {num_processes}"
+        )
+    if _already_initialized():
+        _STATE = ProcessInfo(
+            jax.process_index(), jax.process_count(), coordinator, True
+        )
+        return _STATE
+
+    if _initialize is None:
+        # only when the real runtime will come up: gloo CPU collectives
+        # require the distributed client the fake test seam never creates
+        _enable_cpu_collectives()
+    initialize = _initialize or jax.distributed.initialize
+    deadline = time.monotonic() + timeout
+    delay = max(backoff, 1e-3)
+    attempt = 0
+    last_err: Optional[BaseException] = None
+    while True:
+        attempt += 1
+        remaining = deadline - time.monotonic()
+        if remaining <= 0:
+            raise TimeoutError(
+                f"could not join jax.distributed coordinator at "
+                f"{coordinator!r} as process {process_id}/{num_processes} "
+                f"within {timeout:.0f}s ({attempt - 1} attempts); last "
+                f"error: {last_err}"
+            )
+        try:
+            initialize(
+                coordinator_address=coordinator,
+                num_processes=num_processes,
+                process_id=process_id,
+                initialization_timeout=max(int(remaining), 1),
+            )
+            break
+        except (RuntimeError, ValueError, ConnectionError) as e:
+            last_err = e
+            time.sleep(min(delay, max(deadline - time.monotonic(), 0)))
+            delay = min(delay * 2, _BACKOFF_CAP)
+
+    _STATE = ProcessInfo(
+        jax.process_index(), jax.process_count(), coordinator, True
+    )
+    return _STATE
+
+
+def process_info() -> ProcessInfo:
+    """The resolved :class:`ProcessInfo` (implicitly single-process when
+    :func:`init_from_env` was never called)."""
+    if _STATE is not None:
+        return _STATE
+    try:
+        return ProcessInfo(
+            jax.process_index(), jax.process_count(), None,
+            jax.process_count() > 1,
+        )
+    except Exception:
+        return ProcessInfo(0, 1, None, False)
+
+
+def shutdown() -> None:
+    """Tear down the distributed runtime (best effort; test hygiene)."""
+    global _STATE
+    try:
+        jax.distributed.shutdown()
+    except Exception:
+        pass
+    _STATE = None
+
+
+def _reset_for_tests() -> None:
+    """Forget the memoized ProcessInfo without touching the runtime."""
+    global _STATE
+    _STATE = None
+
+
+def host_local_rows_to_global(mesh, x):
+    """Assemble per-process row blocks into one global row-sharded array.
+
+    Each process holds its own contiguous block of rows (a data-pipeline
+    shard); the result is a global ``jax.Array`` row-sharded over every
+    axis of ``mesh``, whose global row count is ``process_count x
+    local_rows``.  Single-process: a plain ``device_put``.  The callback
+    form means only this process's rows are ever materialized here —
+    nothing is gathered.
+    """
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    x = np.asarray(x)
+    info = process_info()
+    if not info.is_multiprocess:
+        return jax.device_put(x)
+    nproc = info.process_count
+    global_shape = (x.shape[0] * nproc,) + x.shape[1:]
+    row0 = x.shape[0] * info.process_index
+    sharding = NamedSharding(mesh, PartitionSpec(tuple(mesh.axis_names)))
+
+    def cb(index):
+        """Slice this process's rows for one device's global index."""
+        rows = index[0]
+        start = 0 if rows.start is None else rows.start
+        stop = global_shape[0] if rows.stop is None else rows.stop
+        return x[start - row0:stop - row0][(slice(None),) + index[1:]]
+
+    return jax.make_array_from_callback(global_shape, sharding, cb)

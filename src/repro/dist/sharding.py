@@ -73,6 +73,7 @@ class MeshDesc:
         self.shape = dict(shape)
 
     def __repr__(self):
+        """``MeshDesc({'data': 4, ...})`` — round-trippable axis map."""
         return f"MeshDesc({self.shape})"
 
 
@@ -221,6 +222,7 @@ def optimizer_state_axes(name: str, param_axes):
       vectors keep their own axes.
     """
     def leaf(axes: Tuple[Optional[str], ...]):
+        """Expand one param's axes into its optimizer-slot axes."""
         if name == "adamw":
             return {"m": axes, "v": axes}
         if name == "adamw8bit":

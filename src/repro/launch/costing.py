@@ -102,7 +102,10 @@ def _body_cost_inner(cfg, shape, mesh, rules, kind, stack, collective_bytes) -> 
         positions = jnp.arange(S_full)
 
         def body(lp, x):
+            """One remat train step: loss + grads for the stack body."""
+
             def inner(lp, x):
+                """Scalar loss of the stack body (the remat target)."""
                 if stack == "encoder":
                     y = _enc_body(cfg, lp, x, positions)
                 elif stack == "encdec_decoder":
@@ -126,6 +129,7 @@ def _body_cost_inner(cfg, shape, mesh, rules, kind, stack, collective_bytes) -> 
         positions = jnp.arange(S_full)
 
         def body(lp, x):
+            """Prefill forward pass of the stack body."""
             if stack == "encoder":
                 return _enc_body(cfg, lp, x, positions)
             if stack == "encdec_decoder":
@@ -157,6 +161,7 @@ def _body_cost_inner(cfg, shape, mesh, rules, kind, stack, collective_bytes) -> 
         positions = jnp.arange(1)
 
         def body(lp, x, cache):
+            """One cached decode step of the stack body."""
             if stack == "encdec_decoder":
                 return _encdec_dec_decode_body(cfg, lp, x, cache)
             y, cache, _ = tf.layer_apply(

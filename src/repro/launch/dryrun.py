@@ -1,11 +1,3 @@
-# The dry-run (and ONLY the dry-run) needs 512 placeholder devices; jax
-# locks the device count on first init, so this MUST precede every import.
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", "")
-)
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell this builds abstract inputs (ShapeDtypeStruct — zero
@@ -18,6 +10,21 @@ Usage:
     python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
     python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
 """
+
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices; jax
+# locks the device count on first init, so this must precede every import
+# — but only when this module IS the entry point (`python -m
+# repro.launch.dryrun`).  Library importers (costing, the collective
+# parser tests) must not have their process env mutated: XLA_FLAGS set
+# here leaks into every subprocess they spawn afterwards, silently
+# giving those children 512 virtual devices.
+import os
+
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
 
 import argparse
 import json
@@ -78,6 +85,7 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
 
 def _batch_shardings(batch_specs, mesh):
     def leaf(sds):
+        """Batch-shard dim 0, seq-shard dim 1, replicate the rest."""
         nd = len(sds.shape)
         axes = ("batch",) + ("seq",) * (nd >= 2) + (None,) * max(nd - 2, 0)
         return shd.named_sharding(sds.shape, axes[:nd], mesh)
@@ -95,7 +103,8 @@ def _replicated(mesh):
 
 
 def pick_optimizer_name(cfg: ModelConfig) -> str:
-    # 8-bit moments when fp32 m+v would not fit 256 chips (arctic-class)
+    """The production optimizer for this arch: 8-bit moments when fp32
+    m+v would not fit 256 chips (arctic-class), plain adamw otherwise."""
     model = build_model(cfg)
     return "adamw8bit" if param_count(model.specs) > 5e10 else "adamw"
 
@@ -163,6 +172,7 @@ def lower_cell(
             pstep = make_prefill_step(model)
 
             def prefill(params, batch, seed):
+                """Prefill step with the PRNG key derived in-graph."""
                 key = jax.random.PRNGKey(seed)
                 tok, caches = pstep(params, batch, key)
                 return tok, caches
@@ -179,6 +189,7 @@ def lower_cell(
             sstep = make_serve_step(model)
 
             def decode(params, caches, token, pos, seed):
+                """One decode step with the PRNG key derived in-graph."""
                 key = jax.random.PRNGKey(seed)
                 return sstep(params, caches, token, pos, key)
 
@@ -316,6 +327,7 @@ def collective_bytes(hlo_text: str) -> Dict[str, float]:
 
 
 def main():
+    """CLI: run the selected cells, one JSON result file per cell."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS)
     ap.add_argument("--shape", choices=list(SHAPES_BY_NAME))

@@ -35,6 +35,7 @@ from repro.serve.engine import generate
 
 
 def main():
+    """CLI: run a small closed-loop serve session and print stats."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b", choices=ARCH_IDS)
     ap.add_argument("--smoke", action="store_true", default=True)

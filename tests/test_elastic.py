@@ -177,5 +177,6 @@ def test_int8_checkpoint_roundtrip(tmp_path):
         assert err <= float(scale) * 0.5 + 1e-7, f"{k}: err {err}"
     assert int(restored["count"]) == 42
     # and the artifact really is smaller: int8 payload ~1/4 of fp32
-    data = os.path.getsize(os.path.join(str(tmp_path), "step_00000001", "data.bin"))
+    data = os.path.getsize(
+        os.path.join(str(tmp_path), "step_00000001", "data.rank0.bin"))
     assert data < 64 * 32 * 2 * 4  # strictly under the uncompressed size

@@ -1,0 +1,668 @@
+"""Multi-process `repro.dist`: init_from_env retry contract, heartbeat
+mailboxes + the monitor feeder, per-host shard checkpoints (layout,
+commit barrier, manifest-skew errors, legacy reader) — and, gated
+`slow`, REAL two-process `jax.distributed` pairs over a loopback
+coordinator: per-host shard files with no gather, cross-process
+straggler flagging, SIGKILL fault injection detected by heartbeat
+timeout, bit-exact resume from the last committed checkpoint, and an
+elastic 2-host -> 1-host restore."""
+
+import json
+import os
+import socket
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.dist import multihost
+from repro.dist.fault import CheckpointError, CheckpointManager
+from repro.dist.heartbeat import (
+    RING,
+    FileMailbox,
+    LocalMailbox,
+    MonitorFeeder,
+    open_mailbox,
+)
+from repro.dist.monitor import StepMonitor
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# init_from_env: env contract, retry/backoff, idempotency
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(autouse=True)
+def _fresh_multihost_state():
+    multihost._reset_for_tests()
+    yield
+    multihost._reset_for_tests()
+
+
+class TestInitFromEnv:
+    def test_no_coordinator_is_a_single_process_noop(self):
+        info = multihost.init_from_env()
+        assert info == multihost.ProcessInfo(0, 1, None, False)
+        assert not info.is_multiprocess
+
+    def test_idempotent(self):
+        a = multihost.init_from_env()
+        b = multihost.init_from_env(coordinator="ignored:1234", num_processes=4)
+        assert a is b  # memoized; second call can't re-initialize
+
+    def test_env_contract_parsed(self, monkeypatch):
+        calls = []
+
+        def fake_init(**kw):
+            calls.append(kw)
+
+        monkeypatch.setenv("REPRO_COORDINATOR", "10.0.0.1:8476")
+        monkeypatch.setenv("REPRO_NUM_PROCESSES", "2")
+        monkeypatch.setenv("REPRO_PROCESS_ID", "0")
+        info = multihost.init_from_env(_initialize=fake_init)
+        assert len(calls) == 1
+        assert calls[0]["coordinator_address"] == "10.0.0.1:8476"
+        assert calls[0]["num_processes"] == 2
+        assert calls[0]["process_id"] == 0
+        assert calls[0]["initialization_timeout"] >= 1
+        assert info.initialized and info.coordinator == "10.0.0.1:8476"
+
+    def test_retries_transient_failures_with_backoff(self):
+        calls = []
+
+        def flaky_init(**kw):
+            calls.append(kw)
+            if len(calls) < 3:
+                raise RuntimeError("connection refused")
+
+        info = multihost.init_from_env(
+            coordinator="127.0.0.1:1", num_processes=2, process_id=0,
+            timeout=30.0, backoff=0.01, _initialize=flaky_init,
+        )
+        assert len(calls) == 3
+        assert info.initialized
+
+    def test_timeout_raises_descriptively(self):
+        def dead_init(**kw):
+            raise RuntimeError("no route to host")
+
+        with pytest.raises(TimeoutError, match=r"127\.0\.0\.1:9"):
+            multihost.init_from_env(
+                coordinator="127.0.0.1:9", num_processes=2, process_id=1,
+                timeout=0.15, backoff=0.02, _initialize=dead_init,
+            )
+
+    def test_bad_process_id_rejected(self):
+        with pytest.raises(ValueError, match="out of range"):
+            multihost.init_from_env(
+                coordinator="h:1", num_processes=2, process_id=5,
+            )
+
+    def test_process_info_fallback(self):
+        info = multihost.process_info()
+        assert info.process_index == 0 and info.process_count >= 1
+
+
+# ---------------------------------------------------------------------------
+# heartbeat mailboxes + feeder
+# ---------------------------------------------------------------------------
+
+
+class TestMailbox:
+    def test_file_roundtrip_and_liveness_only_beat(self, tmp_path):
+        mb = FileMailbox(str(tmp_path), host=3)
+        mb.beat(now=10.0)  # liveness only, no step record
+        mb.beat(step=0, step_time=0.5, tokens=100.0, now=11.0)
+        beats = mb.read()
+        assert set(beats) == {3}
+        b = beats[3]
+        assert b.time == 11.0
+        assert b.steps == [{"step": 0, "step_time": 0.5, "tokens": 100.0}]
+
+    def test_ring_is_bounded(self, tmp_path):
+        mb = FileMailbox(str(tmp_path), host=0)
+        for s in range(RING + 10):
+            mb.beat(step=s, step_time=0.1, now=float(s))
+        steps = [r["step"] for r in mb.read()[0].steps]
+        assert len(steps) == RING
+        assert steps[-1] == RING + 9  # newest kept, oldest dropped
+
+    def test_unparseable_files_skipped(self, tmp_path):
+        mb = FileMailbox(str(tmp_path), host=0)
+        mb.beat(now=1.0)
+        (tmp_path / "host1.json").write_text("{not json")
+        (tmp_path / "hostX.json").write_text("{}")
+        assert set(mb.read()) == {0}
+
+    def test_two_writers_one_reader(self, tmp_path):
+        a = FileMailbox(str(tmp_path), host=0)
+        b = FileMailbox(str(tmp_path), host=1)
+        a.beat(step=0, step_time=0.1, now=5.0)
+        b.beat(step=0, step_time=0.2, now=6.0)
+        beats = a.read()
+        assert beats[0].steps[0]["step_time"] == 0.1
+        assert beats[1].steps[0]["step_time"] == 0.2
+
+    def test_local_mailbox_same_interface(self):
+        mb = LocalMailbox(host=0)
+        mb.beat(step=2, step_time=0.3, now=1.0)
+        assert mb.read()[0].steps[-1]["step"] == 2
+
+    def test_open_mailbox_dispatch(self, tmp_path):
+        assert isinstance(open_mailbox(str(tmp_path), host=0), FileMailbox)
+        assert isinstance(open_mailbox(None), LocalMailbox)
+
+
+class TestMonitorFeeder:
+    def test_feeds_only_complete_rows_in_order(self, tmp_path):
+        mon = StepMonitor(num_hosts=2, min_records=1)
+        a = FileMailbox(str(tmp_path), host=0)
+        b = FileMailbox(str(tmp_path), host=1)
+        feeder = MonitorFeeder(mon, FileMailbox(str(tmp_path), host=0))
+        a.beat(step=0, step_time=0.1, tokens=10.0, now=1.0)
+        a.beat(step=1, step_time=0.1, tokens=10.0, now=2.0)
+        assert feeder.poll() == []          # host 1 hasn't reported yet
+        b.beat(step=0, step_time=0.4, tokens=10.0, now=2.5)
+        assert feeder.poll() == [0]         # step 0 complete, step 1 not
+        b.beat(step=1, step_time=0.4, tokens=10.0, now=3.0)
+        assert feeder.poll() == [1]
+        assert feeder.poll() == []          # nothing fed twice
+        # genuinely per-host medians: host 1 is the straggler
+        assert mon.flagged_hosts() == [1]
+
+    def test_ring_covers_a_slow_poller(self, tmp_path):
+        mon = StepMonitor(num_hosts=2, min_records=1)
+        a = FileMailbox(str(tmp_path), host=0)
+        b = FileMailbox(str(tmp_path), host=1)
+        for s in range(5):  # many beats between polls
+            a.beat(step=s, step_time=0.1, now=float(s))
+            b.beat(step=s, step_time=0.1, now=float(s))
+        feeder = MonitorFeeder(mon, a)
+        assert feeder.poll() == [0, 1, 2, 3, 4]
+
+    def test_dead_host_detected_without_any_complete_row(self, tmp_path):
+        mon = StepMonitor(num_hosts=2, min_records=1, heartbeat_timeout=1.0)
+        a = FileMailbox(str(tmp_path), host=0)
+        feeder = MonitorFeeder(mon, a)
+        a.beat(now=101.5)           # host 0 alive, host 1 never speaks
+        feeder.poll()
+        # startup grace: host 1 is measured from the fleet's first beat,
+        # so it isn't flagged instantly...
+        assert mon.dead_hosts(now=102.0) == []
+        a.beat(now=103.0)
+        feeder.poll()
+        # ...but once the timeout elapses it is as dead as one that stopped
+        assert mon.dead_hosts(now=103.5) == [1]
+        # and a host that stops beating goes dead too
+        FileMailbox(str(tmp_path), host=1).beat(now=104.0)
+        feeder.poll()
+        assert mon.dead_hosts(now=104.5) == [0]
+
+
+# ---------------------------------------------------------------------------
+# per-host shard checkpoints: single-process layout + protocol
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {
+        "w": jnp.arange(24, dtype=jnp.float32).reshape(4, 6),
+        "b": jnp.full((3,), 2.5, jnp.float32),
+        "n": np.int64(7),
+    }
+
+
+class TestCheckpointLayout:
+    def test_per_rank_files_no_legacy_blob(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(1, _tree(), extra={"step": 1})
+        d = tmp_path / "step_00000001"
+        assert sorted(os.listdir(d)) == ["data.rank0.bin", "manifest.json"]
+        man = json.loads((d / "manifest.json").read_text())
+        assert man["schema"] == 2
+        assert man["topology"]["processes"] == 1
+        assert man["files"]["0"]["name"] == "data.rank0.bin"
+        assert man["files"]["0"]["nbytes"] == os.path.getsize(d / "data.rank0.bin")
+
+    def test_roundtrip_and_restore_stats(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        t = _tree()
+        mgr.save(3, t, extra={"cursor": [1, 2]}, mesh={"data": 1})
+        out, extra = mgr.restore(like=t)
+        assert extra == {"cursor": [1, 2]}
+        for k in t:
+            np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(t[k]))
+        stats = mgr.restore_stats()
+        assert stats["files_read"] == ["data.rank0.bin"]
+        assert stats["saved_topology"] == {
+            "processes": 1, "devices": jax.device_count(), "mesh": {"data": 1},
+        }
+
+    def test_commit_barrier_rank1_waits_for_rank0(self, tmp_path):
+        """World-size-2 protocol without jax.distributed: rank 1 publishes
+        its (empty) marker then blocks until rank 0 merges + commits."""
+        t = _tree()
+        m0 = CheckpointManager(str(tmp_path), async_save=False,
+                               process_index=0, process_count=2)
+        m1 = CheckpointManager(str(tmp_path), async_save=False,
+                               process_index=1, process_count=2,
+                               commit_timeout=20.0)
+        done = {}
+
+        def rank1():
+            m1.save(1, t, extra={"step": 1})
+            done["t"] = time.monotonic()
+
+        th = threading.Thread(target=rank1)
+        th.start()
+        time.sleep(0.1)
+        assert "t" not in done          # rank 1 still waiting on the commit
+        m0.save(1, t, extra={"step": 1})
+        th.join(timeout=10)
+        assert "t" in done
+        d = tmp_path / "step_00000001"
+        assert sorted(os.listdir(d)) == [
+            "data.rank0.bin", "data.rank1.bin", "manifest.json",
+        ]
+        man = json.loads((d / "manifest.json").read_text())
+        assert man["topology"]["processes"] == 2
+        # host-replicated leaves are owned by rank 0; rank 1 wrote no bytes
+        assert man["files"]["1"]["nbytes"] == 0
+        out, _ = m0.restore(like=t)
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(t["w"]))
+
+    def test_missing_rank_marker_times_out_without_commit(self, tmp_path):
+        m0 = CheckpointManager(str(tmp_path), async_save=False,
+                               process_index=0, process_count=2,
+                               commit_timeout=0.3)
+        with pytest.raises(TimeoutError, match=r"ranks \[1\]"):
+            m0.save(1, _tree())
+        assert m0.steps() == []          # nothing was committed
+        # the aborted temp dir is swept by the next (successful) save
+        m = CheckpointManager(str(tmp_path), async_save=False)
+        m.save(2, _tree())
+        assert [n for n in os.listdir(tmp_path) if n.startswith(".tmp")] == []
+
+    def test_async_error_surfaces_on_wait(self, tmp_path):
+        m0 = CheckpointManager(str(tmp_path), async_save=True,
+                               process_index=0, process_count=2,
+                               commit_timeout=0.2)
+        m0.save(1, _tree())
+        with pytest.raises(TimeoutError):
+            m0.wait()
+
+    def test_legacy_schema1_checkpoint_still_restores(self, tmp_path):
+        t = _tree()
+        d = tmp_path / "step_00000005"
+        d.mkdir()
+        blob, leaves = b"", []
+        for x in jax.tree.leaves(t):
+            arr = np.ascontiguousarray(np.asarray(x))
+            raw = arr.tobytes()
+            leaves.append({
+                "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "offset": len(blob), "nbytes": len(raw), "enc": "raw",
+            })
+            blob += raw
+        (d / "data.bin").write_bytes(blob)
+        (d / "manifest.json").write_text(json.dumps(
+            {"schema": 1, "leaves": leaves, "extra": {"step": 5}}
+        ))
+        out, extra = CheckpointManager(str(tmp_path)).restore(like=t)
+        assert extra == {"step": 5}
+        for k in t:
+            np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(t[k]))
+
+
+class TestManifestSkew:
+    """Restoring a manifest that disagrees with the on-disk shards must
+    raise a descriptive CheckpointError, never load garbage."""
+
+    @pytest.fixture()
+    def saved(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(1, _tree())
+        return tmp_path / "step_00000001", mgr
+
+    def _edit_manifest(self, d, fn):
+        man = json.loads((d / "manifest.json").read_text())
+        fn(man)
+        (d / "manifest.json").write_text(json.dumps(man))
+
+    def test_missing_shard_file(self, saved):
+        d, mgr = saved
+        os.rename(d / "data.rank0.bin", d / "data.rank0.bin.gone")
+        with pytest.raises(CheckpointError, match="data.rank0.bin.*missing"):
+            mgr.restore(like=_tree())
+
+    def test_topology_process_count_mismatch(self, saved):
+        d, mgr = saved
+        self._edit_manifest(d, lambda m: m["topology"].update(processes=2))
+        with pytest.raises(CheckpointError, match="2 processes.*1 shard"):
+            mgr.restore(like=_tree())
+
+    def test_truncated_shard_file(self, saved):
+        d, mgr = saved
+        size = os.path.getsize(d / "data.rank0.bin")
+        with open(d / "data.rank0.bin", "r+b") as f:
+            f.truncate(size - 8)
+        with pytest.raises(CheckpointError, match="truncated|bytes on disk"):
+            mgr.restore(like=_tree())
+
+    def test_corrupted_shard_content(self, saved):
+        d, mgr = saved
+        with open(d / "data.rank0.bin", "r+b") as f:
+            f.write(b"\xff\xfe\xfd\xfc")
+        with pytest.raises(CheckpointError, match="hash"):
+            mgr.restore(like=_tree())
+
+    def test_shard_table_hole(self, saved):
+        d, mgr = saved
+        self._edit_manifest(d, lambda m: m["shards"]["0"].pop(0))
+        with pytest.raises(CheckpointError, match="do not cover"):
+            mgr.restore(like=_tree())
+
+
+# ---------------------------------------------------------------------------
+# REAL two-process jax.distributed pairs (slow; own CI step)
+# ---------------------------------------------------------------------------
+
+# Every rank runs this same loop (exactly like launch/train.py): beat its
+# own mailbox each step, write its own checkpoint shards; rank 0
+# additionally polls the feeder during the paced sleep so dead-host
+# detection latency is bounded by the heartbeat timeout, not the step
+# cadence.  The step function is elementwise (zero collectives) so it is
+# deterministic AND survivor-safe: the live rank keeps computing after
+# its peer is SIGKILLed.
+WORKER = textwrap.dedent(
+    """
+    import os, sys, time, json, hashlib
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax
+    from repro.dist import multihost
+
+    info = multihost.init_from_env()          # the REPRO_* env contract
+    import numpy as np
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.dist.fault import CheckpointManager
+    from repro.dist.heartbeat import FileMailbox, MonitorFeeder
+    from repro.dist.monitor import StepMonitor
+
+    assert info.is_multiprocess and jax.process_count() == 2
+    rank = info.process_index
+    CKPT = os.environ["T_CKPT"]
+    HB = os.environ["T_HB"]
+    STEPS = int(os.environ["T_STEPS"])
+    EVERY = int(os.environ["T_EVERY"])
+    SLEEP = float(os.environ["T_SLEEP"])
+    SLOW1 = os.environ.get("T_SLOW1") == "1"
+    HT = float(os.environ.get("T_HB_TIMEOUT", "5.0"))
+
+    def emit(kind, **kw):
+        print(json.dumps({"kind": kind, "rank": rank, **kw}), flush=True)
+
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    row_sh = NamedSharding(mesh, P("data"))
+    rep_sh = NamedSharding(mesh, P())
+    x0 = jax.device_put(
+        jnp.arange(16, dtype=jnp.float32).reshape(2, 8) / 7.0, row_sh)
+    y0 = jax.device_put(jnp.linspace(0.0, 1.0, 5, dtype=jnp.float32), rep_sh)
+    state = {"x": x0, "y": y0}
+    shardings = {"x": row_sh, "y": rep_sh}
+
+    @jax.jit
+    def step_fn(s, i):
+        f = jnp.float32(i)
+        return {"x": s["x"] * 1.0001 + f * 0.01,
+                "y": s["y"] * 0.999 + f * 0.001}
+
+    mgr = CheckpointManager(CKPT, keep=10, async_save=False,
+                            commit_timeout=60.0)
+    mailbox = FileMailbox(HB)
+    monitor = StepMonitor(num_hosts=2, min_records=2, heartbeat_timeout=HT)
+    feeder = MonitorFeeder(monitor, mailbox) if rank == 0 else None
+
+    start = 0
+    if mgr.latest_step() is not None:
+        state, extra = mgr.restore(like=state, shardings=shardings)
+        start = extra["step"]
+        emit("resumed", step=start,
+             files_read=mgr.restore_stats()["files_read"])
+
+    # warm the compile cache, then handshake: rank 0 arms dead-host
+    # detection only after BOTH mailboxes exist (no -inf false positive
+    # from a peer that is still compiling)
+    jax.block_until_ready(step_fn(state, jnp.int32(start))["x"])
+    mailbox.beat()
+    if feeder is not None:
+        t_end = time.monotonic() + 120
+        while len(mailbox.read()) < 2:
+            if time.monotonic() > t_end:
+                raise SystemExit("peer mailbox never appeared")
+            time.sleep(0.02)
+
+    for step in range(start, STEPS):
+        t0 = time.perf_counter()
+        state = step_fn(state, jnp.int32(step))
+        jax.block_until_ready(state["x"])
+        # paced sleep doubling as the monitor poll loop
+        end = time.perf_counter() + SLEEP
+        while True:
+            if feeder is not None:
+                feeder.poll(now=time.time())
+                dead = monitor.dead_hosts(now=time.time())
+                if dead:
+                    emit("dead", hosts=dead, at_step=step)
+                    # hard exit: a graceful shutdown would block in the
+                    # coordination service waiting for the dead peer
+                    os._exit(3)     # pair gets restarted by the harness
+            rem = end - time.perf_counter()
+            if rem <= 0:
+                break
+            time.sleep(min(rem, 0.05))
+        dt = time.perf_counter() - t0
+        mailbox.beat(step=step, step_time=dt + (0.5 if SLOW1 and rank else 0),
+                     tokens=8.0)
+        if (step + 1) % EVERY == 0:
+            mgr.save(step + 1, state, extra={"step": step + 1}, mesh=mesh)
+            emit("saved", step=step + 1)
+        emit("progress", step=step)
+
+    mgr.save(STEPS, state, extra={"step": STEPS}, mesh=mesh)
+
+    def sha(a):
+        return hashlib.sha256(
+            np.ascontiguousarray(np.asarray(a)).tobytes()).hexdigest()
+
+    local_x = state["x"].addressable_shards[0]
+    emit("final", step=STEPS,
+         x_local=sha(local_x.data),
+         x_row=int(local_x.index[0].start or 0),
+         y=sha(state["y"].addressable_shards[0].data),
+         stragglers=(monitor.flagged_hosts() if rank == 0 else None))
+    """
+)
+
+ELASTIC = textwrap.dedent(
+    """
+    import os, json, hashlib
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.dist.fault import CheckpointManager
+
+    like = {"x": jnp.zeros((2, 8), jnp.float32),
+            "y": jnp.zeros((5,), jnp.float32)}
+    mgr = CheckpointManager(os.environ["T_CKPT"])
+    out, extra = mgr.restore(like=like)     # 2-host save -> 1-host restore
+
+    def sha(a):
+        return hashlib.sha256(
+            np.ascontiguousarray(np.asarray(a)).tobytes()).hexdigest()
+
+    x = np.asarray(out["x"])
+    print(json.dumps({
+        "step": extra["step"],
+        "rows": [sha(x[0:1]), sha(x[1:2])],
+        "y": sha(np.asarray(out["y"])),
+        "files_read": mgr.restore_stats()["files_read"],
+    }))
+    """
+)
+
+
+def _free_port():
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _spawn_pair(ckpt, hb, **extra):
+    port = _free_port()
+    procs = []
+    for r in (0, 1):
+        env = dict(
+            os.environ,
+            PYTHONPATH=os.path.join(REPO, "src"),
+            JAX_PLATFORMS="cpu",
+            REPRO_COORDINATOR=f"127.0.0.1:{port}",
+            REPRO_NUM_PROCESSES="2",
+            REPRO_PROCESS_ID=str(r),
+            T_CKPT=ckpt,
+            T_HB=hb,
+        )
+        # each worker must see exactly its own default device: an inherited
+        # --xla_force_host_platform_device_count (e.g. from another test
+        # importing the dry-run in-process) would inflate the global mesh
+        env.pop("XLA_FLAGS", None)
+        env.update({k: str(v) for k, v in extra.items()})
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", WORKER], env=env,
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        ))
+    return procs
+
+
+def _events(proc, timeout=240):
+    out, err = proc.communicate(timeout=timeout)
+    assert proc.returncode == 0, f"rank exited {proc.returncode}:\n{err[-3000:]}"
+    return [json.loads(ln) for ln in out.splitlines() if ln.startswith("{")]
+
+
+def _final(events):
+    return next(e for e in events if e["kind"] == "final")
+
+
+@pytest.mark.slow
+class TestTwoProcessPair:
+    def test_pair_checkpoint_straggler_and_elastic_restore(self, tmp_path):
+        """Uninterrupted 2-process run: per-host shard files, cross-
+        process straggler flagging, and a 2-host checkpoint restored by
+        1 host bit-exactly."""
+        ckpt = str(tmp_path / "ck")
+        procs = _spawn_pair(ckpt, str(tmp_path / "hb"),
+                            T_STEPS=12, T_EVERY=6, T_SLEEP=0.05, T_SLOW1=1)
+        fin0, fin1 = (_final(_events(p)) for p in procs)
+
+        # per-host shard files, both non-empty — nothing was gathered
+        d = os.path.join(ckpt, "step_00000012")
+        with open(os.path.join(d, "manifest.json")) as f:
+            man = json.load(f)
+        assert man["topology"]["processes"] == 2
+        assert man["topology"]["mesh"] == {"data": 2}
+        assert os.path.exists(os.path.join(d, "data.rank0.bin"))
+        assert os.path.exists(os.path.join(d, "data.rank1.bin"))
+        assert int(man["files"]["1"]["nbytes"]) > 0
+
+        # the genuinely-slower host 1 was flagged from mailbox timings
+        assert fin0["stragglers"] == [1]
+
+        # elastic 2 -> 1: a single process reassembles the same bits
+        out = subprocess.run(
+            [sys.executable, "-c", ELASTIC],
+            env=dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+                     JAX_PLATFORMS="cpu", T_CKPT=ckpt),
+            capture_output=True, text=True, timeout=120,
+        )
+        assert out.returncode == 0, out.stderr[-3000:]
+        single = json.loads(out.stdout.strip().splitlines()[-1])
+        assert single["step"] == 12
+        by_row = {fin0["x_row"]: fin0["x_local"], fin1["x_row"]: fin1["x_local"]}
+        assert single["rows"] == [by_row[0], by_row[1]]
+        assert single["y"] == fin0["y"] == fin1["y"]
+        # the 1-host restore needed every rank's file (it takes all rows)
+        assert single["files_read"] == ["data.rank0.bin", "data.rank1.bin"]
+
+    def test_fault_injection_and_bit_exact_resume(self, tmp_path):
+        """SIGKILL rank 1 mid-sweep: rank 0 detects it via heartbeat
+        timeout; a restarted pair resumes from the last committed step
+        and finishes bit-identical to an uninterrupted reference run."""
+        # --- reference: uninterrupted pair
+        ref = _spawn_pair(str(tmp_path / "ref"), str(tmp_path / "hb_ref"),
+                          T_STEPS=16, T_EVERY=6, T_SLEEP=0.05)
+        rfin = [_final(_events(p)) for p in ref]
+
+        # --- victim pair: kill rank 1 right after a checkpoint commits.
+        # Save cadence (EVERY * SLEEP = 0.9s) comfortably exceeds the
+        # detection latency (T_HB_TIMEOUT + one 0.05s poll chunk), so
+        # rank 0 reports the death before it could block in a save
+        # waiting on the dead rank's marker.
+        ckpt = str(tmp_path / "ck")
+        p0, p1 = _spawn_pair(ckpt, str(tmp_path / "hb_kill"),
+                             T_STEPS=16, T_EVERY=6, T_SLEEP=0.15,
+                             T_HB_TIMEOUT=0.5)
+        committed = 0
+        for line in p1.stdout:
+            if not line.startswith("{"):
+                continue
+            e = json.loads(line)
+            if e["kind"] == "saved":
+                committed = e["step"]
+            if committed and e["kind"] == "progress" and e["step"] >= committed:
+                break
+        assert committed == 6
+        p1.kill()        # SIGKILL — no cleanup, no goodbye
+        p1.communicate()
+
+        # rank 0 keeps stepping (elementwise compute needs no peer),
+        # notices the silent mailbox, reports the dead host and stops
+        dead = None
+        for line in p0.stdout:
+            if line.startswith("{"):
+                e = json.loads(line)
+                if e["kind"] == "dead":
+                    dead = e
+                    break
+        assert dead is not None and dead["hosts"] == [1], dead
+        p0.communicate(timeout=60)
+        assert p0.returncode == 3        # the survivor's deliberate exit
+
+        assert CheckpointManager(ckpt).latest_step() == committed
+
+        # --- restarted pair resumes from the committed step
+        procs = _spawn_pair(ckpt, str(tmp_path / "hb_resume"),
+                            T_STEPS=16, T_EVERY=6, T_SLEEP=0.05)
+        evs = [_events(p) for p in procs]
+        for ev in evs:
+            resumed = next(e for e in ev if e["kind"] == "resumed")
+            assert resumed["step"] == committed
+        # lazy restore: rank 0's row + the rank-0-owned replicated leaf
+        # both live in data.rank0.bin — rank 1's file was never touched
+        r0 = next(e for e in evs[0] if e["kind"] == "resumed")
+        assert r0["files_read"] == ["data.rank0.bin"]
+
+        # --- bit-exact against the uninterrupted reference
+        for got, want in zip([_final(ev) for ev in evs], rfin):
+            assert got["x_local"] == want["x_local"]
+            assert got["y"] == want["y"]
